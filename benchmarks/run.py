@@ -1,0 +1,85 @@
+"""Benchmark driver — one section per paper table. Prints CSV rows and writes
+JSON artifacts under results/benchmarks/.
+
+    PYTHONPATH=src python -m benchmarks.run            # all tables
+    PYTHONPATH=src python -m benchmarks.run --quick    # skip the search tables
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import json
+import sys
+import time
+from pathlib import Path
+
+from benchmarks import tables
+
+
+def emit(rows):
+    if not rows:
+        return
+    cols = list(rows[0].keys())
+    w = csv.DictWriter(sys.stdout, fieldnames=cols)
+    w.writeheader()
+    for r in rows:
+        w.writerow(r)
+    sys.stdout.flush()
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="defaults + roofline only")
+    ap.add_argument("--skip-lm", action="store_true", help="wordcount platform only")
+    args = ap.parse_args(argv)
+
+    t0 = time.time()
+    all_rows = []
+    platforms = ["wordcount"] + ([] if args.skip_lm else ["lm_train"])
+
+    for platform in platforms:
+        print(f"\n## Table {'III' if platform == 'wordcount' else 'VI'} — "
+              f"{platform}: all-defaults execution time")
+        rows = tables.table_defaults(platform)
+        emit(rows); all_rows += rows
+
+    if not args.quick:
+        for platform in platforms:
+            print(f"\n## Table {'IV' if platform == 'wordcount' else 'VII'} — "
+                  f"{platform}: one parameter at optimal, rest default")
+            rows = tables.table_one_opt(platform)
+            emit(rows); all_rows += rows
+
+            print(f"\n## Table {'V' if platform == 'wordcount' else 'VIII'} — "
+                  f"{platform}: all parameters at individual optimal")
+            rows = tables.table_all_opt(platform)
+            emit(rows); all_rows += rows
+
+            print(f"\n## Table {'IX' if platform == 'wordcount' else 'X'} — "
+                  f"{platform}: Grid Search with Finer Tuning")
+            rows = tables.table_gsft(platform)
+            emit(rows); all_rows += rows
+
+            print(f"\n## Table {'XI' if platform == 'wordcount' else 'XII'} — "
+                  f"{platform}: Controlled Random Search")
+            rows = tables.table_crs(platform)
+            emit(rows); all_rows += rows
+
+        print("\n## §XI comparison — reduction in execution time")
+        rows = tables.table_comparison()
+        emit(rows); all_rows += rows
+
+    print("\n## §Roofline — per (arch × shape) on the 16×16 production mesh "
+          "(from the dry-run artifacts)")
+    rows = tables.table_roofline()
+    emit(rows); all_rows += rows
+
+    out = Path("results/benchmarks/all_tables.json")
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(all_rows, indent=1, default=str))
+    print(f"\nDONE in {time.time() - t0:.0f}s -> {out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

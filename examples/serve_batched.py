@@ -1,0 +1,23 @@
+"""Batched serving example: prefill a request batch and decode with greedy
+sampling (wraps the production serve driver at smoke scale).
+
+    PYTHONPATH=src python examples/serve_batched.py --arch phi3.5-moe-42b-a6.6b
+"""
+import argparse
+import sys
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="phi3.5-moe-42b-a6.6b")
+    args = ap.parse_args()
+    return serve_main([
+        "--arch", args.arch, "--smoke", "--batch", "4",
+        "--prompt-len", "32", "--max-new", "16",
+    ])
+
+
+if __name__ == "__main__":
+    sys.exit(main())

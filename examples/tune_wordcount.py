@@ -1,0 +1,35 @@
+"""The paper, end-to-end: auto-tune WordCount's 12 parameters with BOTH
+algorithms and measured wall-clock time, then compare (paper §X/§XI).
+
+    PYTHONPATH=src python examples/tune_wordcount.py
+"""
+from pathlib import Path
+
+from repro.apps.wordcount import make_evaluator, WORDCOUNT_SPACE
+from repro.core import tune
+
+
+def main():
+    evaluator = make_evaluator()
+    log = Path("results/examples/wordcount_tune.jsonl")
+
+    gsft = tune("train", "gsft", evaluator, space=WORDCOUNT_SPACE, log_path=log,
+                active_params=["replication", "block_tokens", "num_map_tasks"],
+                samples_per_param=3)
+    crs = tune("train", "crs", evaluator, space=WORDCOUNT_SPACE, log_path=log,
+               m=10, k=3, max_rounds=4, seed=0)
+
+    print(f"default execution time : {gsft.default_time*1e3:8.1f} ms")
+    print(f"GSFT  best             : {gsft.best_time*1e3:8.1f} ms "
+          f"(-{gsft.reduction_pct:.1f}%, {gsft.evaluations} trials)")
+    print(f"CRS   best             : {crs.best_time*1e3:8.1f} ms "
+          f"(-{crs.reduction_pct:.1f}%, {crs.evaluations} trials)")
+    print("\nGSFT best config (non-defaults):")
+    for k, v in gsft.best_config.items():
+        if v != WORDCOUNT_SPACE.param(k).default:
+            print(f"  {k} = {v}")
+    print(f"\ntrial log -> {log}")
+
+
+if __name__ == "__main__":
+    main()

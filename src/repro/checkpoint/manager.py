@@ -1,0 +1,150 @@
+"""Sharded checkpointing: async save with atomic publish, restore with
+re-sharding onto a (possibly different) mesh, keep-N garbage collection.
+
+Layout:
+    <dir>/step_00000420/
+        manifest.json        — tree structure, per-leaf shape/dtype, step
+        <leaf-key>.npy       — one file per pytree leaf
+    <dir>/step_00000420.tmp/ …   (atomically renamed on completion)
+
+Async mode hands the (host-gathered) arrays to a writer thread so the train
+loop resumes immediately; ``wait()`` joins before the next save or exit.
+Restore takes a sharding tree and ``device_put``s each leaf — this is what
+elastic re-scaling uses to move a checkpoint onto a *different* mesh
+factorization (see ``repro.ft.elastic``).
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+
+def _leaf_key(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "__".join(parts) or "leaf"
+
+
+class CheckpointManager:
+    def __init__(self, directory, *, keep_n: int = 3, async_save: bool = True):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep_n = keep_n
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ---------------------------------------------------------------- save
+
+    def save(self, step: int, state: Any, *, blocking: Optional[bool] = None):
+        """Snapshot ``state`` at ``step``. Non-blocking by default: arrays are
+        fetched to host, then written + published by a background thread."""
+        self.wait()
+        leaves_with_paths = jax.tree_util.tree_flatten_with_path(state)[0]
+        host_leaves = [(
+            _leaf_key(path), np.asarray(leaf)
+        ) for path, leaf in leaves_with_paths]
+        manifest = {
+            "step": int(step),
+            "time": time.time(),
+            "leaves": {
+                k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                for k, v in host_leaves
+            },
+        }
+
+        def write():
+            tmp = self.dir / f"step_{step:08d}.tmp"
+            final = self.dir / f"step_{step:08d}"
+            if tmp.exists():
+                shutil.rmtree(tmp)
+            tmp.mkdir(parents=True)
+            for k, v in host_leaves:
+                np.save(tmp / f"{k}.npy", v)
+            (tmp / "manifest.json").write_text(json.dumps(manifest))
+            if final.exists():
+                shutil.rmtree(final)
+            tmp.rename(final)  # atomic publish
+            self._gc()
+
+        if blocking if blocking is not None else not self.async_save:
+            write()
+        else:
+            def guarded():
+                try:
+                    write()
+                except BaseException as e:  # surfaced on next wait()
+                    self._error = e
+
+            self._thread = threading.Thread(target=guarded, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    # ------------------------------------------------------------- restore
+
+    def steps(self) -> List[int]:
+        out = []
+        for p in self.dir.glob("step_*"):
+            if p.is_dir() and not p.name.endswith(".tmp") and (p / "manifest.json").exists():
+                out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, like: Any, *, step: Optional[int] = None, shardings: Any = None,
+                mesh=None) -> Any:
+        """Rebuild the ``like``-structured state from disk. ``shardings``
+        (PartitionSpec tree) + ``mesh`` re-shard each leaf — pass the NEW
+        mesh's specs to restore onto a different topology."""
+        self.wait()
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        src = self.dir / f"step_{step:08d}"
+        paths = jax.tree_util.tree_flatten_with_path(like)[0]
+        treedef = jax.tree_util.tree_structure(like)
+        spec_leaves = None
+        if shardings is not None:
+            spec_leaves = jax.tree.leaves(
+                shardings, is_leaf=lambda x: x is None or not isinstance(x, (dict, list, tuple))
+            )
+        out = []
+        for i, (path, leaf) in enumerate(paths):
+            arr = np.load(src / f"{_leaf_key(path)}.npy")
+            if spec_leaves is not None and mesh is not None:
+                from jax.sharding import NamedSharding
+
+                arr = jax.device_put(arr, NamedSharding(mesh, spec_leaves[i]))
+            else:
+                arr = jax.device_put(arr)
+            out.append(arr)
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    # ------------------------------------------------------------------ gc
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[: -self.keep_n] if self.keep_n else []:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)

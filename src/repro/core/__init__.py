@@ -1,0 +1,32 @@
+"""The paper's contribution: auto-tuning of platform configuration parameters.
+
+  - ``space``      — the curated 12-train / 11-serve knob tables (§III)
+  - ``cmpe``       — Configuration Manager & Performance Evaluator (§VII)
+  - ``grid_finer`` — Algorithm I: Grid Search with Finer Tuning (§VIII)
+  - ``crs``        — Algorithm II: Controlled Random Search (§IX)
+  - ``tuner``      — the Admin facade (Figure I)
+  - ``evaluators`` — walltime (paper-faithful) / roofline (AOT) backends
+  - ``roofline``   — TPU v5e roofline terms from compiled artifacts
+  - ``hlo``        — collective-traffic parser over partitioned HLO
+"""
+from repro.core.cmpe import CMPE, best_from_log, read_log
+from repro.core.crs import CRSResult, controlled_random_search
+from repro.core.grid_finer import GridResult, grid_search_finer_tuning
+from repro.core.space import SERVE_SPACE, SPACES, TRAIN_SPACE, TunableSpace
+from repro.core.tuner import TuneOutcome, tune
+
+__all__ = [
+    "CMPE",
+    "CRSResult",
+    "GridResult",
+    "SERVE_SPACE",
+    "SPACES",
+    "TRAIN_SPACE",
+    "TuneOutcome",
+    "TunableSpace",
+    "best_from_log",
+    "controlled_random_search",
+    "grid_search_finer_tuning",
+    "read_log",
+    "tune",
+]

@@ -1,0 +1,157 @@
+"""Collective-traffic extraction from post-SPMD-partitioning HLO text.
+
+``compiled.cost_analysis()`` does not report collective bytes, so we parse
+``compiled.as_text()`` (the partitioned module — shapes in it are already
+PER-DEVICE) and sum the wire bytes of every collective op.
+
+Per-device wire-byte model (ring algorithms, g = devices per replica group,
+R = result bytes as printed):
+
+  all-gather          (g-1)/g · R        (result = full gathered tensor)
+  all-reduce          2(g-1)/g · R       (reduce-scatter + all-gather phases)
+  reduce-scatter      (g-1) · R          (operand = g·R leaves the device once)
+  all-to-all          (g-1)/g · R
+  collective-permute  R
+
+Ops inside ``while`` bodies appear once in the text; trip-count scaling is the
+roofline module's job (it compiles loop-free reduced-depth variants and
+extrapolates), so this parser stays a pure single-pass accountant.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# `%name = <shape> opcode(` where <shape> is a single array or a (tuple)
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*"
+    r"(?P<shape>\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"(?P<op>" + "|".join(COLLECTIVES) + r")(?:-start|-done)?\("
+)
+_ARRAY_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](T\([0-9,]+\))?")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _ARRAY_RE.findall(shape_str):
+        if dtype not in DTYPE_BYTES:
+            continue  # token types etc.
+        numel = 1
+        for d in dims.split(","):
+            if d:
+                numel *= int(d)
+        total += numel * DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_info(line: str) -> Tuple[int, str]:
+    """(devices per group, 'contig'|'strided'|'pairs')."""
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        g = int(m.group(2))
+        contig = m.group(4) is None and "," not in m.group(3)
+        return g, ("contig" if contig else "strided")
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        members = [x for x in m.group(1).split(",") if x.strip()]
+        return len(members), "pairs"
+    return 1, "pairs"
+
+
+@dataclass
+class CollectiveStats:
+    """Aggregated per-device collective traffic for one HLO module."""
+
+    count: int = 0
+    wire_bytes: float = 0.0
+    by_op: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    by_group_size: Dict[int, float] = field(default_factory=lambda: defaultdict(float))
+    counts_by_op: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+
+    def add(self, op: str, g: int, result_bytes: int):
+        if op == "all-gather":
+            wire = (g - 1) / max(g, 1) * result_bytes
+        elif op == "all-reduce":
+            wire = 2 * (g - 1) / max(g, 1) * result_bytes
+        elif op == "reduce-scatter":
+            wire = (g - 1) * result_bytes
+        elif op == "all-to-all":
+            wire = (g - 1) / max(g, 1) * result_bytes
+        else:  # collective-permute
+            wire = float(result_bytes)
+        self.count += 1
+        self.wire_bytes += wire
+        self.by_op[op] += wire
+        self.by_group_size[g] += wire
+        self.counts_by_op[op] += 1
+
+    def scaled(self, factor: float) -> "CollectiveStats":
+        out = CollectiveStats()
+        out.count = self.count
+        out.wire_bytes = self.wire_bytes * factor
+        for k, v in self.by_op.items():
+            out.by_op[k] = v * factor
+        for k, v in self.by_group_size.items():
+            out.by_group_size[k] = v * factor
+        out.counts_by_op = dict(self.counts_by_op)
+        return out
+
+    @staticmethod
+    def combine(a: "CollectiveStats", b: "CollectiveStats", wa: float = 1.0, wb: float = 1.0):
+        out = CollectiveStats()
+        out.count = a.count + b.count
+        out.wire_bytes = wa * a.wire_bytes + wb * b.wire_bytes
+        for src, w in ((a, wa), (b, wb)):
+            for k, v in src.by_op.items():
+                out.by_op[k] += w * v
+            for k, v in src.by_group_size.items():
+                out.by_group_size[k] += w * v
+            for k, v in src.counts_by_op.items():
+                out.counts_by_op[k] = out.counts_by_op.get(k, 0) + v
+        return out
+
+    def summary(self) -> Dict:
+        return {
+            "count": self.count,
+            "wire_bytes": self.wire_bytes,
+            "by_op": dict(self.by_op),
+            "by_group_size": {str(k): v for k, v in self.by_group_size.items()},
+            "counts_by_op": dict(self.counts_by_op),
+        }
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        # async pairs: count the -start, skip the matching -done
+        if "-done(" in line[: m.end() + 8]:
+            continue
+        op = m.group("op")
+        result_bytes = _shape_bytes(m.group("shape"))
+        g, _kind = _group_info(line)
+        stats.add(op, g, result_bytes)
+    return stats

@@ -1,0 +1,93 @@
+"""Admin facade (paper Figure I): pick a platform and an algorithm, run the
+tuning, get the best configuration + the reduction vs. the all-defaults run.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Dict, Optional, Sequence
+
+from repro.core.cmpe import CMPE, Evaluator
+from repro.core.crs import controlled_random_search
+from repro.core.grid_finer import grid_search_finer_tuning
+from repro.core.space import SPACES, TunableSpace
+
+
+@dataclass
+class TuneOutcome:
+    platform: str
+    algorithm: str
+    default_time: float
+    best_time: float
+    best_config: Dict[str, Any]
+    evaluations: int
+    detail: Any = None
+
+    @property
+    def reduction_pct(self) -> float:
+        """The paper's headline metric: % reduction in execution time vs. the
+        all-defaults configuration."""
+        if self.default_time in (0.0, float("inf")):
+            return 0.0
+        return 100.0 * (self.default_time - self.best_time) / self.default_time
+
+    def summary(self) -> Dict[str, Any]:
+        return {
+            "platform": self.platform,
+            "algorithm": self.algorithm,
+            "default_time_s": self.default_time,
+            "best_time_s": self.best_time,
+            "reduction_pct": round(self.reduction_pct, 2),
+            "evaluations": self.evaluations,
+            "best_config": self.best_config,
+        }
+
+
+def tune(
+    platform: str,
+    algorithm: str,
+    evaluator: Evaluator,
+    *,
+    space: Optional[TunableSpace] = None,
+    log_path: Optional[Path] = None,
+    fixed: Optional[Dict[str, Any]] = None,
+    active_params: Optional[Sequence[str]] = None,
+    clear_caches_between_trials: bool = False,
+    **algo_kwargs,
+) -> TuneOutcome:
+    """Run one tuning session (the Admin's 'select algorithm × platform')."""
+    space = space or SPACES[platform]
+    cmpe = CMPE(
+        evaluator,
+        platform=platform,
+        log_path=log_path,
+        clear_caches_between_trials=clear_caches_between_trials,
+    )
+
+    defaults = {**space.defaults(), **(fixed or {})}
+    default_time = cmpe.evaluate(defaults, tag="default")
+
+    if algorithm in ("gsft", "grid"):
+        result = grid_search_finer_tuning(
+            space, cmpe, fixed=fixed, active_params=active_params, **algo_kwargs
+        )
+        best_config, best_time = result.best_config, result.best_time
+    elif algorithm == "crs":
+        result = controlled_random_search(space, cmpe, fixed=fixed, **algo_kwargs)
+        best_config, best_time = result.best_config, result.best_time
+    else:
+        raise ValueError(f"unknown algorithm {algorithm!r} (use 'gsft' or 'crs')")
+
+    # defaults themselves might be the optimum; the log keeps everything
+    if default_time < best_time:
+        best_config, best_time = defaults, default_time
+
+    return TuneOutcome(
+        platform=platform,
+        algorithm=algorithm,
+        default_time=default_time,
+        best_time=best_time,
+        best_config=best_config,
+        evaluations=cmpe.num_evaluations,
+        detail=result,
+    )

@@ -1,0 +1,125 @@
+"""Logical-axis → mesh-axis rules, driven by the tunable RunConfig.
+
+This module is where the execution-layer knobs (the paper's "configuration
+parameters") become concrete GSPMD shardings:
+
+  - ``mesh_model_parallel``   — model-axis size (the mesh itself, see launch.mesh)
+  - ``zero_sharding``         — none | zero1 (opt-state over data) | fsdp (params too)
+  - ``collective_matmul``     — ag (Megatron TP) | rs (sequence-parallel residual)
+  - ``moe_expert_parallel``   — experts over model axis (EP) vs expert-FF TP
+  - ``kv_partition`` / ``attn_partition`` — heads vs sequence partitioning
+
+Every rule degrades gracefully: an axis is only mapped when the concrete
+dimension is divisible by the mesh-axis size (checked in the shard closure),
+so one rule set serves all 10 architectures, including awkward cases like
+whisper's 6 heads or gemma3's single KV head.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+
+from repro.configs.base import ArchConfig, RunConfig, ShapeConfig, resolve_kv_partition
+
+
+def mesh_axis_sizes(mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def batch_axes(mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def make_rules(
+    arch: ArchConfig,
+    run: RunConfig,
+    shape: ShapeConfig,
+    mesh,
+) -> Dict[str, Any]:
+    """Logical-axis rules for one (arch × shape × mesh × run) cell."""
+    sizes = mesh_axis_sizes(mesh)
+    mp = sizes.get("model", 1)
+    dp = sizes.get("data", 1) * sizes.get("pod", 1)
+    b_axes = batch_axes(mesh)
+    dh = arch.resolved_head_dim
+    mode = shape.kind
+
+    heads_ok = arch.num_heads % mp == 0
+    kv_part = resolve_kv_partition(arch, run, mp)
+    # serve: weights are always fully (2D) sharded — a 398B bf16 checkpoint
+    # does not fit 16-way; the per-layer all-gather is the price (tunable via
+    # mesh_model_parallel)
+    fsdp = (run.zero_sharding == "fsdp") if mode == "train" else True
+    seq_par = (
+        run.collective_matmul == "rs"
+        and mode != "decode"
+        and shape.seq_len % mp == 0
+    )
+    batch_ok = shape.global_batch % dp == 0
+
+    rules: Dict[str, Any] = {
+        # ---- parameters -------------------------------------------------
+        "vocab": "model",
+        "embed": "data" if fsdp else None,
+        "ff": "model",
+        "heads_out": "model",
+        "kv_out": "model" if (arch.num_kv_heads * dh) % mp == 0 else None,
+        "heads": "model" if heads_ok else None,
+        "embed_out": "model",
+        "inner": "model",
+        "expert": "model" if run.moe_expert_parallel else None,
+        "ff_expert": None if run.moe_expert_parallel else "model",
+        # ---- activations -------------------------------------------------
+        "act_batch": b_axes if batch_ok else None,
+        "act_seq": "model" if seq_par else None,
+        "act_heads": "model" if heads_ok else None,
+        "act_embed": None,
+        # flattened (B·S) token dim of the MoE dispatch: follows the batch
+        "act_tokens": b_axes if batch_ok else None,
+        # ---- kv / state caches -------------------------------------------
+        "kv_heads": "model" if kv_part == "heads" else None,
+        "kv_seq": "model" if kv_part == "sequence" else None,
+        # helper metadata for the shard closure
+        "_sizes": sizes,
+    }
+
+    # long-context single-sequence decode: batch can't shard; spread the KV
+    # timeline over every chip instead.
+    if mode == "decode" and not batch_ok and kv_part == "sequence":
+        rules["kv_seq"] = b_axes + ("model",)
+    return rules
+
+
+def opt_state_rules(rules: Dict[str, Any], run: RunConfig) -> Dict[str, Any]:
+    """ZeRO-1: optimizer moments additionally sharded over the data axis along
+    the d_model ("embed") dimension present in every projection weight."""
+    if run.zero_sharding not in ("zero1", "fsdp"):
+        return rules
+    out = dict(rules)
+    out["embed"] = "data"
+    return out
+
+
+def batch_partition_specs(arch: ArchConfig, shape: ShapeConfig, mesh, run: RunConfig):
+    """PartitionSpec tree matching Model.input_specs(shape)."""
+    from jax.sharding import PartitionSpec as P
+
+    sizes = mesh_axis_sizes(mesh)
+    dp = sizes.get("data", 1) * sizes.get("pod", 1)
+    b_ax = batch_axes(mesh) if shape.global_batch % dp == 0 else None
+    specs = {}
+    if shape.kind == "train":
+        specs["tokens"] = P(b_ax, None)
+        specs["labels"] = P(b_ax, None)
+    elif shape.kind == "prefill":
+        specs["tokens"] = P(b_ax, None)
+    else:
+        specs["tokens"] = P(b_ax, None)
+        specs["cache_len"] = P()
+    if shape.kind != "decode":
+        if arch.frontend == "vision":
+            specs["patches"] = P(b_ax, None, None)
+        elif arch.frontend == "audio":
+            specs["frames"] = P(b_ax, None, None)
+    return specs

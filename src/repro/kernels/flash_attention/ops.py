@@ -1,0 +1,55 @@
+"""Jitted public wrapper for the flash-attention kernel.
+
+Routing rules (enforced here so the model layer stays simple):
+  - traced / dynamic sliding windows → ValueError (the model's XLA path
+    handles those; gemma-style local:global stacks scan a traced window),
+  - decode (S == 1) → ValueError (the decode path is gather-bound, not a
+    flash workload).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+
+
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    q_positions=None,  # accepted for API parity; kernel assumes iota
+    kv_length=None,
+    causal: bool = True,
+    window=0,
+    softcap_val: float = 0.0,
+    block_q: int = 128,
+    block_kv: int = 128,
+    scale: Optional[float] = 1.0,  # model pre-scales q
+    interpret: bool = False,
+) -> jnp.ndarray:
+    if not isinstance(window, (int, float)):
+        raise ValueError(
+            "pallas flash attention needs a static window; traced per-layer "
+            "windows must use attention_impl='xla'"
+        )
+    if q.shape[1] == 1:
+        raise ValueError("decode steps use the XLA attention path")
+    kv_len = None
+    if kv_length is not None:
+        if hasattr(kv_length, "shape") and getattr(kv_length, "shape", None):
+            raise ValueError("pallas path needs a static scalar kv_length")
+        kv_len = int(kv_length)
+    # MXU alignment: snap blocks to multiples of 128 within bounds
+    block_q = max(128, (int(block_q) // 128) * 128)
+    block_kv = max(128, (int(block_kv) // 128) * 128)
+    return flash_attention_fwd(
+        q, k, v,
+        causal=causal, window=int(window), softcap=float(softcap_val),
+        kv_length=kv_len, block_q=block_q, block_kv=block_kv, scale=scale,
+        interpret=interpret,
+    )

@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for the flash-attention kernel (O(S·T) materialized)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jnp.ndarray,  # (B, S, Hq, Dh)
+    k: jnp.ndarray,  # (B, T, Hkv, Dh)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    kv_length: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    b, s, hq, dh = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = dh**-0.5 if scale is None else scale
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    scores = jnp.einsum(
+        "bshd,bthd->bhst", q.astype(jnp.float32) * scale, k.astype(jnp.float32)
+    )
+    if softcap:
+        scores = softcap * jnp.tanh(scores / softcap)
+    qpos = jnp.arange(s)[None, None, :, None]
+    kpos = jnp.arange(t)[None, None, None, :]
+    mask = jnp.ones((1, 1, s, t), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= qpos - kpos < window
+    if kv_length is not None:
+        mask &= kpos < kv_length
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

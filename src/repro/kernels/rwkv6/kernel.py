@@ -1,0 +1,91 @@
+"""RWKV-6 (Finch) chunked WKV recurrence as a Pallas TPU kernel.
+
+The data-dependent-decay linear attention is computed chunk-parallel: within
+a chunk of C tokens the decay products are factored into the queries/keys so
+the intra-chunk part is two C×C / C×K matmuls (MXU work); across chunks a
+(K, V) state matrix is carried in VMEM scratch — the time axis is the
+sequential grid dimension, exactly mirroring the ``lax.scan`` in
+``repro.models.rwkv6.time_mix`` (the pure-jnp oracle).
+
+Grid: (B, H, n_chunks) with the chunk axis innermost/sequential. Blocks:
+r/k/v/logw tiles of (1, C, 1, hd) straight from the (B, S, H, hd) layout,
+``u`` (per-head bonus) as a (1, hd) tile. All accumulation in f32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, state_scr, *, chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    r = r_ref[0, :, 0, :].astype(jnp.float32)  # (C, K)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)  # (C, V)
+    lw = lw_ref[0, :, 0, :].astype(jnp.float32)  # (C, K) log-decay (<0)
+    u = u_ref[0, :].astype(jnp.float32)  # (K,)
+
+    lcum = jnp.cumsum(lw, axis=0)  # inclusive
+    ltot = lcum[-1:, :]  # (1, K)
+    q_f = r * jnp.exp(lcum - lw)
+    k_f = k * jnp.exp(-lcum)
+
+    scores = jax.lax.dot_general(
+        q_f, k_f, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (C, C)
+    ti = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    tj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    scores = jnp.where(tj < ti, scores, 0.0)  # strictly past tokens
+
+    diag = jnp.sum(r * u[None, :] * k, axis=1)  # (C,) current-token bonus
+    o = jax.lax.dot_general(
+        scores, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    o += diag[:, None] * v
+    o += jax.lax.dot_general(
+        q_f, state_scr[...], (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    k_s = k * jnp.exp(ltot - lcum)  # decays from token to end of chunk
+    state_scr[...] = jnp.exp(ltot).T * state_scr[...] + jax.lax.dot_general(
+        k_s, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    o_ref[0, :, 0, :] = o.astype(o_ref.dtype)
+
+
+def wkv6_chunked(r, k, v, logw, u, *, chunk: int = 64, interpret: bool = False):
+    """r/k/v/logw: (B, S, H, hd); u: (H, hd). Returns (B, S, H, hd) (the WKV
+    mix output, before group-norm/gating)."""
+    b, s, h, hd = r.shape
+    pad = (-s) % chunk
+    if pad:
+        r, k, v = (jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0))) for x in (r, k, v))
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = s + pad
+    n_chunks = sp // chunk
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=(b, h, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, hd), lambda b_, h_, ci: (b_, ci, h_, 0)),
+            pl.BlockSpec((1, chunk, 1, hd), lambda b_, h_, ci: (b_, ci, h_, 0)),
+            pl.BlockSpec((1, chunk, 1, hd), lambda b_, h_, ci: (b_, ci, h_, 0)),
+            pl.BlockSpec((1, chunk, 1, hd), lambda b_, h_, ci: (b_, ci, h_, 0)),
+            pl.BlockSpec((1, hd), lambda b_, h_, ci: (h_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, 1, hd), lambda b_, h_, ci: (b_, ci, h_, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, sp, h, hd), r.dtype),
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, logw, u)
+    return out[:, :s]

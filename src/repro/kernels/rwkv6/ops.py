@@ -1,0 +1,13 @@
+"""Jitted wrapper for the chunked WKV6 kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6.kernel import wkv6_chunked
+
+
+def wkv6(r, k, v, logw, u, *, chunk: int = 64, interpret: bool = False):
+    if r.shape[1] == 1:
+        raise ValueError("decode steps use the exact single-step recurrence")
+    return wkv6_chunked(r, k, v, logw, u, chunk=chunk, interpret=interpret)

@@ -1,0 +1,27 @@
+"""Sequential-recurrence oracle for the WKV6 kernel (exact, O(S) steps)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, logw, u):
+    """r/k/v/logw: (B, S, H, hd); u: (H, hd). Token-by-token recurrence:
+        o_t = r_t · (S + (u ⊙ k_t) v_tᵀ);   S ← diag(e^{logw_t}) S + k_t v_tᵀ
+    """
+    b, s, h, hd = r.shape
+    rf, kf, vf = (x.astype(jnp.float32) for x in (r, k, v))
+    lw = logw.astype(jnp.float32)
+    uf = u.astype(jnp.float32)
+
+    def step(state, xs):
+        r_t, k_t, v_t, lw_t = xs  # (B, H, hd)
+        att = state + (uf[None] * k_t)[..., None] * v_t[:, :, None, :]
+        o_t = jnp.einsum("bhk,bhkv->bhv", r_t, att)
+        state = jnp.exp(lw_t)[..., None] * state + k_t[..., None] * v_t[:, :, None, :]
+        return state, o_t
+
+    xs = tuple(x.transpose(1, 0, 2, 3) for x in (rf, kf, vf, lw))
+    state0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    _, outs = jax.lax.scan(step, state0, xs)
+    return outs.transpose(1, 0, 2, 3).astype(r.dtype)

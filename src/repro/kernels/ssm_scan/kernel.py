@@ -1,0 +1,78 @@
+"""Mamba (S6) selective-scan as a Pallas TPU kernel.
+
+The diagonal recurrence h_t = e^{Δ_t·A} ⊙ h_{t−1} + (Δ_t u_t) B_t is
+sequential in time but embarrassingly parallel over the (d_inner × state)
+plane — on TPU the natural mapping is: channel blocks on the parallel grid
+axes, time as an in-kernel ``fori_loop`` over a VMEM-resident (d_block, N)
+state (GPU implementations instead use warp-level prefix scans; the VREG/VMEM
+hierarchy prefers the wide-vector sequential form — DESIGN.md §5).
+
+Inputs are the *factored* tensors (Δ, A, B, C, u) — the (B, S, d, N) outer
+products are never materialized in HBM (the XLA associative-scan path
+materializes both ``da`` and ``dbu``; this kernel is the memory-roofline fix
+for mamba layers).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(dt_ref, u_ref, b_ref, c_ref, a_ref, y_ref, h_scr, *, chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    dt = dt_ref[0].astype(jnp.float32)  # (C, dib)
+    u = u_ref[0].astype(jnp.float32)  # (C, dib)
+    b_t = b_ref[0].astype(jnp.float32)  # (C, N)
+    c_t = c_ref[0].astype(jnp.float32)  # (C, N)
+    a = a_ref[...].astype(jnp.float32)  # (dib, N)
+
+    def step(t, _):
+        da = jnp.exp(dt[t][:, None] * a)  # (dib, N)
+        h = da * h_scr[...] + (dt[t] * u[t])[:, None] * b_t[t][None, :]
+        h_scr[...] = h
+        y_ref[0, t, :] = jnp.sum(h * c_t[t][None, :], axis=1).astype(y_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, chunk, step, 0)
+
+
+def ssm_scan(dt, u, b_t, c_t, a, *, chunk: int = 128, d_block: int = 256,
+             interpret: bool = False):
+    """dt/u: (B, S, di); b_t/c_t: (B, S, N); a: (di, N). Returns y (B, S, di)
+    (the h·C contraction; caller adds the D-skip and gating)."""
+    b, s, di = dt.shape
+    n = a.shape[1]
+    d_block = min(d_block, di)
+    assert di % d_block == 0, (di, d_block)
+    pad = (-s) % chunk
+    if pad:
+        dt, u = (jnp.pad(x, ((0, 0), (0, pad), (0, 0))) for x in (dt, u))
+        b_t, c_t = (jnp.pad(x, ((0, 0), (0, pad), (0, 0))) for x in (b_t, c_t))
+    sp = s + pad
+    n_chunks = sp // chunk
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=(b, di // d_block, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, d_block), lambda b_, dbi, ci: (b_, ci, dbi)),
+            pl.BlockSpec((1, chunk, d_block), lambda b_, dbi, ci: (b_, ci, dbi)),
+            pl.BlockSpec((1, chunk, n), lambda b_, dbi, ci: (b_, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b_, dbi, ci: (b_, ci, 0)),
+            pl.BlockSpec((d_block, n), lambda b_, dbi, ci: (dbi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, d_block), lambda b_, dbi, ci: (b_, ci, dbi)),
+        out_shape=jax.ShapeDtypeStruct((b, sp, di), dt.dtype),
+        scratch_shapes=[pltpu.VMEM((d_block, n), jnp.float32)],
+        interpret=interpret,
+    )(dt, u, b_t, c_t, a)
+    return out[:, :s]

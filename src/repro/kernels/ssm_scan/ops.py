@@ -1,0 +1,13 @@
+"""Jitted wrapper for the selective-scan kernel."""
+from __future__ import annotations
+
+from repro.kernels.ssm_scan.kernel import ssm_scan
+
+
+def selective_scan(dt, u, b_t, c_t, a, *, chunk: int = 128, d_block: int = 256,
+                   interpret: bool = False):
+    di = dt.shape[-1]
+    while di % d_block:
+        d_block //= 2
+    return ssm_scan(dt, u, b_t, c_t, a, chunk=chunk, d_block=max(d_block, 1),
+                    interpret=interpret)

@@ -1,0 +1,26 @@
+"""Sequential oracle for the selective-scan kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(dt, u, b_t, c_t, a):
+    """dt/u: (B, S, di); b_t/c_t: (B, S, N); a: (di, N) -> y (B, S, di)."""
+    dtf, uf = dt.astype(jnp.float32), u.astype(jnp.float32)
+    bf, cf = b_t.astype(jnp.float32), c_t.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    b, s, di = dt.shape
+
+    def step(h, xs):
+        dt_t, u_t, b_tt, c_tt = xs  # (B, di), (B, di), (B, N), (B, N)
+        da = jnp.exp(dt_t[..., None] * af[None])  # (B, di, N)
+        h = da * h + (dt_t * u_t)[..., None] * b_tt[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_tt)
+        return h, y
+
+    xs = (dtf.transpose(1, 0, 2), uf.transpose(1, 0, 2),
+          bf.transpose(1, 0, 2), cf.transpose(1, 0, 2))
+    h0 = jnp.zeros((b, di, af.shape[1]), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2).astype(dt.dtype)

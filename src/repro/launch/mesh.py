@@ -1,0 +1,46 @@
+"""Mesh construction. Functions (not module-level constants) so importing
+this module never touches JAX device state."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The assignment's production mesh: one v5e pod = 16×16 = 256 chips
+    (data × model); multi-pod adds a leading pod axis (2 × 16 × 16 = 512)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_tuning_mesh(model_parallel: int, *, chips: int = 256, multi_pod: bool = False):
+    """Mesh for a tuner-chosen ``mesh_model_parallel`` factorization of the
+    same chip count: data = chips // model (× optional pod axis)."""
+    if chips % model_parallel:
+        raise ValueError(f"model_parallel {model_parallel} !| chips {chips}")
+    data = chips // model_parallel
+    if multi_pod:
+        return jax.make_mesh(
+            (2, data, model_parallel), ("pod", "data", "model"),
+            axis_types=(AxisType.Auto,) * 3,
+        )
+    return jax.make_mesh(
+        (data, model_parallel), ("data", "model"), axis_types=(AxisType.Auto,) * 2
+    )
+
+
+def make_host_mesh(model_parallel: int = 1, *, pod: int = 0):
+    """Small mesh over however many (possibly fake) devices exist — used by
+    tests and CPU examples."""
+    n = len(jax.devices())
+    if pod:
+        data = n // (model_parallel * pod)
+        return jax.make_mesh(
+            (pod, data, model_parallel), ("pod", "data", "model"),
+            axis_types=(AxisType.Auto,) * 3,
+        )
+    data = n // model_parallel
+    return jax.make_mesh(
+        (data, model_parallel), ("data", "model"), axis_types=(AxisType.Auto,) * 2
+    )

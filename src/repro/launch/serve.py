@@ -1,0 +1,99 @@
+"""Batched serving driver: prefill a request batch, then greedy decode.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --smoke \
+        --batch 4 --prompt-len 32 --max-new 16
+
+Demonstrates the serving path end-to-end on real arrays: the prefill bundle
+fills the KV/state caches (capacity = prompt + max-new), the decode bundle is
+stepped token-by-token with donated caches, and the driver reports prefill
+latency + decode throughput. ``--tuned-config`` applies a knob dict from the
+tuner.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RunConfig, ShapeConfig
+from repro.configs.archs import ARCH_NAMES, get_arch
+from repro.distributed.steps import make_decode_step, make_prefill_step
+from repro.launch.mesh import make_host_mesh
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b", choices=ARCH_NAMES)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--tuned-config", type=Path, default=None)
+    args = ap.parse_args(argv)
+
+    arch = get_arch(args.arch, smoke=args.smoke)
+    total = args.prompt_len + args.max_new
+    prefill_shape = ShapeConfig("cli_prefill", args.prompt_len, args.batch, "prefill")
+    decode_shape = ShapeConfig("cli_decode", total, args.batch, "decode")
+    run = RunConfig(mesh_model_parallel=args.model_parallel)
+    if args.tuned_config:
+        from repro.core.space import SERVE_SPACE
+
+        run = SERVE_SPACE.to_run_config(json.loads(args.tuned_config.read_text()), run)
+    mesh = make_host_mesh(model_parallel=args.model_parallel)
+
+    with jax.set_mesh(mesh):
+        pre = make_prefill_step(arch, run, prefill_shape, mesh)
+        dec = make_decode_step(arch, run, decode_shape, mesh)
+        model = pre.model
+        params = model.init_params(jax.random.PRNGKey(0))
+        batch = model.make_inputs(prefill_shape)
+
+        prefill_fn = pre.jit()
+        decode_fn = dec.jit()
+
+        t0 = time.perf_counter()
+        logits, caches = jax.block_until_ready(prefill_fn(params, batch))
+        t_prefill = time.perf_counter() - t0
+
+        # grow prefill caches (capacity=prompt) to decode capacity (total)
+        def grow(path, x):
+            name = path[-1].key if hasattr(path[-1], "key") else ""
+            if name in ("k", "v", "ks", "vs"):
+                pad = [(0, 0)] * x.ndim
+                pad[2] = (0, args.max_new)
+                return jnp.pad(x, pad)
+            return x
+
+        caches = jax.tree_util.tree_map_with_path(grow, caches)
+
+        tokens = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        generated = [tokens]
+        t0 = time.perf_counter()
+        for i in range(args.max_new - 1):
+            step_batch = {
+                "tokens": tokens,
+                "cache_len": jnp.asarray(args.prompt_len + i, jnp.int32),
+            }
+            logits, caches = decode_fn(params, caches, step_batch)
+            tokens = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            generated.append(tokens)
+        jax.block_until_ready(tokens)
+        t_decode = time.perf_counter() - t0
+
+    n_new = args.max_new * args.batch
+    print(f"prefill: {args.batch}×{args.prompt_len} tokens in {t_prefill:.3f}s")
+    print(f"decode : {n_new} tokens in {t_decode:.3f}s "
+          f"({n_new / max(t_decode, 1e-9):.1f} tok/s)")
+    out = jnp.concatenate(generated, axis=1)
+    print("sampled token ids (first request):", out[0].tolist())
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

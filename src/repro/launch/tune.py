@@ -1,0 +1,84 @@
+"""Tuning driver — the paper's Admin box: pick platform × algorithm, run it.
+
+Roofline evaluator (production mesh, AOT — needs the 512 fake devices, so run
+it the same way as the dry-run):
+
+    PYTHONPATH=src python -m repro.launch.tune --platform train \
+        --algorithm gsft --arch qwen2-72b --shape train_4k --evaluator roofline
+
+Walltime evaluator on the paper's WordCount job (CPU-measured, the faithful
+reproduction):
+
+    PYTHONPATH=src python -m repro.launch.tune --platform wordcount \
+        --algorithm crs
+"""
+import os
+
+if "--evaluator" in __import__("sys").argv and "roofline" in __import__("sys").argv:
+    os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.configs.base import SHAPES
+from repro.configs.archs import ARCH_NAMES, get_arch
+from repro.core import SPACES, tune
+from repro.core.evaluators import RooflineEvaluator
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--platform", default="train", choices=["train", "serve", "wordcount"])
+    ap.add_argument("--algorithm", default="gsft", choices=["gsft", "crs"])
+    ap.add_argument("--arch", default="llama3.2-1b", choices=ARCH_NAMES)
+    ap.add_argument("--shape", default="train_4k", choices=list(SHAPES))
+    ap.add_argument("--evaluator", default="roofline", choices=["roofline", "walltime"])
+    ap.add_argument("--chips", type=int, default=256)
+    ap.add_argument("--active", nargs="*", default=None, help="grid knobs (gsft)")
+    ap.add_argument("--samples", type=int, default=3)
+    ap.add_argument("--m", type=int, default=12, help="crs draws per round")
+    ap.add_argument("--k", type=int, default=4, help="crs survivors")
+    ap.add_argument("--rounds", type=int, default=4)
+    ap.add_argument("--log", type=Path, default=Path("results/tune_log.jsonl"))
+    ap.add_argument("--out", type=Path, default=None, help="write best config JSON")
+    args = ap.parse_args(argv)
+
+    if args.platform == "wordcount":
+        from repro.apps.wordcount import WORDCOUNT_SPACE, make_evaluator
+
+        evaluator = make_evaluator()
+        space = WORDCOUNT_SPACE
+        active = args.active or ["replication", "block_tokens", "num_map_tasks"]
+    else:
+        arch = get_arch(args.arch)
+        shape = SHAPES[args.shape]
+        if shape.name in arch.skip_shapes:
+            raise SystemExit(f"{args.shape} skipped for {args.arch} (DESIGN.md §6)")
+        space = SPACES[args.platform]
+        evaluator = RooflineEvaluator(arch, shape, space, chips=args.chips)
+        active = args.active or list(space.most_influential)
+
+    kwargs = (
+        dict(active_params=active, samples_per_param=args.samples)
+        if args.algorithm == "gsft"
+        else dict(m=args.m, k=args.k, max_rounds=args.rounds)
+    )
+    outcome = tune(
+        args.platform if args.platform != "wordcount" else "train",
+        args.algorithm,
+        evaluator,
+        space=space,
+        log_path=args.log,
+        **kwargs,
+    )
+    print(json.dumps(outcome.summary(), indent=1, default=str))
+    if args.out:
+        args.out.parent.mkdir(parents=True, exist_ok=True)
+        args.out.write_text(json.dumps(outcome.best_config, indent=1, default=str))
+        print(f"best config -> {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

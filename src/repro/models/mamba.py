@@ -1,0 +1,131 @@
+"""Mamba (S6) selective-SSM block, as used by Jamba's SSM layers.
+
+Training/prefill path: depthwise causal conv + ``lax.associative_scan`` over
+time for the diagonal state recurrence (log-depth, while-loop-free, so AOT cost
+analysis is exact). The inner dimension is sharded over the ``model`` axis
+(column-parallel in_proj / row-parallel out_proj), which keeps the scan local
+to each device. Decode path: exact single-step recurrence against a carried
+(conv window, ssm state) cache. The Pallas kernel in ``repro.kernels.ssm_scan``
+implements the single-pass time-blocked version targeted at TPU VMEM.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import PSpec
+
+
+def mamba_specs(arch: ArchConfig) -> Dict[str, PSpec]:
+    d = arch.d_model
+    di = arch.ssm_expand * d
+    n = arch.ssm_state_dim
+    dt_rank = max(d // 16, 1)
+    return {
+        "in_proj": PSpec((d, 2 * di), ("embed", "inner")),
+        "conv_w": PSpec((arch.ssm_conv_width, di), (None, "inner"), init="small_normal"),
+        "conv_b": PSpec((di,), ("inner",), init="zeros"),
+        "x_proj": PSpec((di, dt_rank + 2 * n), ("inner", None), init="small_normal"),
+        "dt_proj": PSpec((dt_rank, di), (None, "inner"), init="small_normal"),
+        "dt_bias": PSpec((di,), ("inner",), init="zeros"),
+        "a_log": PSpec((di, n), ("inner", None), init="zeros"),
+        "d_skip": PSpec((di,), ("inner",), init="ones"),
+        "out_proj": PSpec((di, d), ("inner", "embed")),
+    }
+
+
+def _ssm_inputs(p, x, arch: ArchConfig):
+    """Common projections. x: (B, S, D) -> (xz pieces, dt, B_t, C_t, A)."""
+    n = arch.ssm_state_dim
+    dt_rank = max(arch.d_model // 16, 1)
+    cd = x.dtype
+    xz = x @ p["in_proj"].astype(cd)  # (B, S, 2*di)
+    di = xz.shape[-1] // 2
+    xin, z = xz[..., :di], xz[..., di:]
+    bcdt = None  # computed after conv
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (di, N), negative
+    return xin, z, a, dt_rank, n
+
+
+def mamba_forward(p, x, arch: ArchConfig, return_cache: bool = False):
+    """Full-sequence path. x: (B, S, D) -> (out (B, S, D), cache | None)."""
+    b, s, _ = x.shape
+    xin, z, a, dt_rank, n = _ssm_inputs(p, x, arch)
+    di = xin.shape[-1]
+    cd = x.dtype
+
+    # Depthwise causal conv over time.
+    kw = arch.ssm_conv_width
+    xpad = jnp.pad(xin, ((0, 0), (kw - 1, 0), (0, 0)))
+    conv = sum(
+        xpad[:, i : i + s, :] * p["conv_w"].astype(cd)[i] for i in range(kw)
+    ) + p["conv_b"].astype(cd)
+    u = jax.nn.silu(conv)  # (B, S, di)
+
+    bcdt = u @ p["x_proj"].astype(cd)  # (B, S, dt_rank + 2N)
+    dt = jax.nn.softplus(
+        bcdt[..., :dt_rank] @ p["dt_proj"].astype(cd) + p["dt_bias"].astype(cd)
+    ).astype(jnp.float32)  # (B, S, di)
+    b_t = bcdt[..., dt_rank : dt_rank + n].astype(jnp.float32)  # (B, S, N)
+    c_t = bcdt[..., dt_rank + n :].astype(jnp.float32)
+
+    # Diagonal recurrence h_t = da_t ⊙ h_{t-1} + (dt u)_t B_t via associative scan.
+    da = jnp.exp(dt[..., None] * a[None, None])  # (B, S, di, N)
+    dbu = (dt * u.astype(jnp.float32))[..., None] * b_t[:, :, None, :]  # (B,S,di,N)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (da, dbu), axis=1)
+    y = jnp.einsum("bsdn,bsn->bsd", h, c_t)  # (B, S, di)
+    y = y + u.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = y.astype(cd) * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(cd)
+    if not return_cache:
+        return out, None
+    kw = arch.ssm_conv_width
+    cache = {"conv": xin[:, s - (kw - 1):, :], "ssm": h[:, -1]}
+    return out, cache
+
+
+def mamba_decode_step(p, x, cache, arch: ArchConfig):
+    """Single-token recurrence. x: (B, 1, D); cache: {conv (B,kw-1,di),
+    ssm (B,di,N)}. Returns (out (B,1,D), new cache)."""
+    b = x.shape[0]
+    xin, z, a, dt_rank, n = _ssm_inputs(p, x, arch)
+    di = xin.shape[-1]
+    cd = x.dtype
+    kw = arch.ssm_conv_width
+
+    window = jnp.concatenate([cache["conv"], xin], axis=1)  # (B, kw, di)
+    conv = jnp.einsum("bkd,kd->bd", window, p["conv_w"].astype(cd)) + p["conv_b"].astype(cd)
+    u = jax.nn.silu(conv)  # (B, di)
+
+    bcdt = u @ p["x_proj"].astype(cd)
+    dt = jax.nn.softplus(
+        bcdt[..., :dt_rank] @ p["dt_proj"].astype(cd) + p["dt_bias"].astype(cd)
+    ).astype(jnp.float32)  # (B, di)
+    b_t = bcdt[..., dt_rank : dt_rank + n].astype(jnp.float32)
+    c_t = bcdt[..., dt_rank + n :].astype(jnp.float32)
+
+    da = jnp.exp(dt[..., None] * a[None])  # (B, di, N)
+    h = da * cache["ssm"] + (dt * u.astype(jnp.float32))[..., None] * b_t[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, c_t)
+    y = y + u.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = (y.astype(cd) * jax.nn.silu(z[:, 0]))[:, None]
+    out = y @ p["out_proj"].astype(cd)
+    new_cache = {"conv": window[:, 1:], "ssm": h}
+    return out.reshape(b, 1, -1), new_cache
+
+
+def init_mamba_cache(arch: ArchConfig, batch: int, dtype=jnp.bfloat16):
+    di = arch.ssm_expand * arch.d_model
+    return {
+        "conv": jnp.zeros((batch, arch.ssm_conv_width - 1, di), dtype),
+        "ssm": jnp.zeros((batch, di, arch.ssm_state_dim), jnp.float32),
+    }

@@ -1,0 +1,164 @@
+"""RWKV6 (Finch) block: time-mix with data-dependent decay + channel-mix.
+
+The training/prefill path uses the chunked linear-attention formulation
+(GLA-style): within a chunk, decay products are factored into the queries and
+keys so intra-chunk attention is a plain masked matmul; across chunks a
+(B, H, K, V) state is carried by ``lax.scan``. The same math backs the Pallas
+kernel in ``repro.kernels.rwkv6``. Decode is the exact single-step recurrence.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import PSpec, rms_norm
+
+LORA_DIM = 64
+
+
+def rwkv_specs(arch: ArchConfig) -> Dict[str, PSpec]:
+    d = arch.d_model
+    h = d // arch.rwkv_head_dim
+    ff = arch.d_ff
+    return {
+        "tmix": {
+            "mu": PSpec((5, d), (None, "embed"), init="zeros"),  # r,k,v,g,w shift mixes
+            "w_r": PSpec((d, d), ("embed", "heads_out")),
+            "w_k": PSpec((d, d), ("embed", "heads_out")),
+            "w_v": PSpec((d, d), ("embed", "heads_out")),
+            "w_g": PSpec((d, d), ("embed", "heads_out")),
+            "w_o": PSpec((d, d), ("heads_out", "embed")),
+            "w0": PSpec((d,), ("embed",), init="zeros"),
+            "w_lora_a": PSpec((d, LORA_DIM), ("embed", None), init="small_normal"),
+            "w_lora_b": PSpec((LORA_DIM, d), (None, "embed"), init="zeros"),
+            "u": PSpec((h, arch.rwkv_head_dim), ("heads", None), init="zeros"),
+            "ln_x": PSpec((d,), ("embed",), init="zeros"),  # per-head group norm
+        },
+        "cmix": {
+            "mu": PSpec((2, d), (None, "embed"), init="zeros"),  # k, r
+            "w_k": PSpec((d, ff), ("embed", "ff")),
+            "w_v": PSpec((ff, d), ("ff", "embed")),
+            "w_r": PSpec((d, d), ("embed", "embed_out")),
+        },
+    }
+
+
+def _shift(x, prev):
+    """Token shift: x[:, t] -> x[:, t-1]; position 0 takes ``prev`` (B, D)."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _decay(p, xw):
+    """Data-dependent per-channel decay w_t in (0,1); returns log(w_t)."""
+    lora = jnp.tanh(xw.astype(jnp.float32) @ p["w_lora_a"].astype(jnp.float32))
+    dd = lora @ p["w_lora_b"].astype(jnp.float32)
+    return -jnp.exp(p["w0"].astype(jnp.float32) + dd)  # log w = -exp(...) < 0
+
+
+def time_mix(p, x, prev_x, state, arch: ArchConfig, chunk: int = 64,
+             unroll: bool = False):
+    """x: (B, S, D); prev_x: (B, D) shift state; state: (B, H, K, V) wkv state.
+    Returns (out, new_prev_x, new_state)."""
+    b, s, d = x.shape
+    hd = arch.rwkv_head_dim
+    h = d // hd
+    xs = _shift(x, prev_x)
+    mu = p["mu"].astype(x.dtype)  # (5, D)
+    mix = lambda i: x + mu[i] * (xs - x)
+    cd = x.dtype
+    r = (mix(0) @ p["w_r"].astype(cd)).reshape(b, s, h, hd)
+    k = (mix(1) @ p["w_k"].astype(cd)).reshape(b, s, h, hd)
+    v = (mix(2) @ p["w_v"].astype(cd)).reshape(b, s, h, hd)
+    g = mix(3) @ p["w_g"].astype(cd)
+    logw = _decay(p["tmix_alias"] if "tmix_alias" in p else p, mix(4)).reshape(b, s, h, hd)
+    u = p["u"].astype(jnp.float32)
+
+    if s == 1:
+        out, new_state = _decode_step(r, k, v, logw, u, state)
+        return _output(p, out, g, arch), x[:, -1], new_state
+
+    n_chunks = -(-s // chunk)
+    pad = n_chunks * chunk - s
+    if pad:
+        r, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0))) for t in (r, k, v))
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    rc = r.reshape(b, n_chunks, chunk, h, hd).transpose(1, 0, 3, 2, 4)  # (N,B,H,C,K)
+    kc = k.reshape(b, n_chunks, chunk, h, hd).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(b, n_chunks, chunk, h, hd).transpose(1, 0, 3, 2, 4)
+    lw = logw.reshape(b, n_chunks, chunk, h, hd).transpose(1, 0, 3, 2, 4).astype(jnp.float32)
+
+    def body(S, blk):
+        rb, kb, vb, lwb = blk  # (B,H,C,K/V)
+        lcum = jnp.cumsum(lwb, axis=2)  # inclusive log-decay products
+        ltot = lcum[:, :, -1:, :]
+        # factor decays into q/k: q' = r ⊙ exp(lcum_{t-1}); k' = k ⊙ exp(-lcum_τ)
+        q_f = rb.astype(jnp.float32) * jnp.exp(lcum - lwb)
+        k_f = kb.astype(jnp.float32) * jnp.exp(-lcum)
+        scores = jnp.einsum("bhck,bhdk->bhcd", q_f, k_f)  # (B,H,C,C)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        scores = jnp.where(tri, scores, 0.0)
+        # diagonal bonus term: r_t · (u ⊙ k_t)
+        diag = jnp.einsum("bhck,bhck->bhc", rb.astype(jnp.float32) * u[None, :, None, :], kb.astype(jnp.float32))
+        o_intra = jnp.einsum("bhcd,bhdv->bhcv", scores, vb.astype(jnp.float32))
+        o_intra += diag[..., None] * vb.astype(jnp.float32)
+        o_inter = jnp.einsum("bhck,bhkv->bhcv", q_f, S)
+        # state update: S' = diag(exp ltot) S + Σ (k ⊙ exp(ltot - lcum)) v^T
+        k_s = kb.astype(jnp.float32) * jnp.exp(ltot - lcum)
+        S_new = jnp.exp(ltot).transpose(0, 1, 3, 2) * S + jnp.einsum(
+            "bhck,bhcv->bhkv", k_s, vb.astype(jnp.float32)
+        )
+        return S_new, (o_intra + o_inter).astype(x.dtype)
+
+    state, outs = jax.lax.scan(
+        body, state.astype(jnp.float32), (rc, kc, vc, lw), unroll=unroll
+    )
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(b, n_chunks * chunk, h, hd)[:, :s]
+    return _output(p, out, g, arch), x[:, -1], state
+
+
+def _decode_step(r, k, v, logw, u, state):
+    """Single-token recurrence. r/k/v/logw: (B,1,H,K); state: (B,H,K,V)."""
+    r0, k0, v0 = (t[:, 0].astype(jnp.float32) for t in (r, k, v))
+    lw = logw[:, 0].astype(jnp.float32)
+    state = state.astype(jnp.float32)
+    att = state + (u[None] * k0)[..., None] * v0[:, :, None, :]
+    out = jnp.einsum("bhk,bhkv->bhv", r0, att)[:, None]  # (B,1,H,V)
+    new_state = jnp.exp(lw)[..., None] * state + k0[..., None] * v0[:, :, None, :]
+    return out, new_state
+
+
+def _output(p, out, g, arch: ArchConfig):
+    b, s = out.shape[:2]
+    d = arch.d_model
+    hd = arch.rwkv_head_dim
+    # per-head group norm
+    o = out.reshape(b, s, d // hd, hd).astype(jnp.float32)
+    o = o * jax.lax.rsqrt(jnp.mean(jnp.square(o), -1, keepdims=True) + 1e-5)
+    o = o.reshape(b, s, d) * (1.0 + p["ln_x"].astype(jnp.float32))
+    o = o.astype(g.dtype) * jax.nn.silu(g)
+    return o @ p["w_o"].astype(g.dtype)
+
+
+def channel_mix(p, x, prev_x):
+    """RWKV channel mix. Returns (out, new_prev_x)."""
+    xs = _shift(x, prev_x)
+    mu = p["mu"].astype(x.dtype)
+    xk = x + mu[0] * (xs - x)
+    xr = x + mu[1] * (xs - x)
+    k = jnp.square(jax.nn.relu(xk @ p["w_k"].astype(x.dtype)))
+    kv = k @ p["w_v"].astype(x.dtype)
+    return jax.nn.sigmoid(xr @ p["w_r"].astype(x.dtype)) * kv, x[:, -1]
+
+
+def init_rwkv_state(arch: ArchConfig, batch: int, dtype=jnp.float32):
+    d = arch.d_model
+    hd = arch.rwkv_head_dim
+    return {
+        "wkv": jnp.zeros((batch, d // hd, hd, hd), jnp.float32),
+        "shift_t": jnp.zeros((batch, d), dtype),
+        "shift_c": jnp.zeros((batch, d), dtype),
+    }

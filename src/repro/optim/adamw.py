@@ -1,0 +1,84 @@
+"""AdamW with configurable moment dtype and ZeRO-friendly state layout.
+
+The optimizer state is a plain pytree mirroring the parameter tree, so the
+distribution layer can assign it *different* shardings from the parameters
+(ZeRO-1: moments sharded over the data axis; see
+``repro.distributed.sharding.opt_state_rules``). The ``optimizer_moment_dtype``
+RunConfig knob (bfloat16 moments) halves optimizer-state HBM — one of the
+paper-analog "memory.mb"-class parameters.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWConfig(NamedTuple):
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    moment_dtype: str = "float32"
+
+
+def init_opt_state(params, cfg: AdamWConfig) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+    }
+
+
+def abstract_opt_state(params, cfg: AdamWConfig):
+    dt = jnp.dtype(cfg.moment_dtype)
+    z = lambda p: jax.ShapeDtypeStruct(p.shape, dt)
+    return {"mu": jax.tree.map(z, params), "nu": jax.tree.map(z, params)}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def adamw_update(
+    grads,
+    opt_state: Dict[str, Any],
+    params,
+    step: jnp.ndarray,
+    lr: jnp.ndarray,
+    cfg: AdamWConfig,
+) -> Tuple[Any, Dict[str, Any]]:
+    """One AdamW step. Returns (new_params, new_opt_state)."""
+    dt = jnp.dtype(cfg.moment_dtype)
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    def upd(g, mu, nu, p):
+        g32 = g.astype(jnp.float32)
+        mu32 = cfg.b1 * mu.astype(jnp.float32) + (1.0 - cfg.b1) * g32
+        nu32 = cfg.b2 * nu.astype(jnp.float32) + (1.0 - cfg.b2) * jnp.square(g32)
+        mhat = mu32 / bc1
+        nhat = nu32 / bc2
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * delta
+        return new_p.astype(p.dtype), mu32.astype(dt), nu32.astype(dt)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_mu = jax.tree.leaves(opt_state["mu"])
+    flat_nu = jax.tree.leaves(opt_state["nu"])
+    flat_p = jax.tree.leaves(params)
+    out = [upd(g, mu, nu, p) for g, mu, nu, p in zip(flat_g, flat_mu, flat_nu, flat_p)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_mu = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_nu = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_p, {"mu": new_mu, "nu": new_nu}

@@ -1,0 +1,17 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak_lr: float, warmup_steps: int = 100,
+                  total_steps: int = 10000, final_frac: float = 0.1):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+    warm = peak_lr * jnp.minimum(step / max(warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup_steps, warm, peak_lr * cos)
+
+
+def constant(step, *, peak_lr: float):
+    return jnp.full((), peak_lr, jnp.float32)

@@ -1,0 +1,42 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here on purpose — smoke tests and
+benchmarks must see the real single CPU device; multi-device tests spawn
+subprocesses that set --xla_force_host_platform_device_count themselves."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+SRC = REPO / "src"
+
+
+@pytest.fixture(scope="session")
+def repo_root() -> Path:
+    return REPO
+
+
+def run_subprocess_devices(code: str, devices: int = 8, timeout: int = 600):
+    """Run ``code`` in a fresh python with N fake devices; returns stdout."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = str(SRC)
+    proc = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=timeout,
+    )
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed (rc={proc.returncode})\nstdout:\n{proc.stdout}\n"
+            f"stderr:\n{proc.stderr[-4000:]}"
+        )
+    return proc.stdout
+
+
+@pytest.fixture(scope="session")
+def subproc():
+    return run_subprocess_devices

@@ -1,0 +1,106 @@
+"""Per-architecture smoke tests: reduced config, one real train / prefill /
+decode step on CPU, asserting output shapes and finiteness (deliverable f)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.archs import ARCH_NAMES, FULL, SMOKE, get_arch
+from repro.configs.base import RunConfig, ShapeConfig
+from repro.models.model import Model
+from repro.models.transformer import structural_period
+
+RUN = RunConfig()
+TRAIN = ShapeConfig("t", 32, 2, "train")
+PREFILL = ShapeConfig("p", 32, 2, "prefill")
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_train_step_smoke(name):
+    arch = get_arch(name, smoke=True)
+    m = Model(arch, RUN)
+    params = m.init_params(jax.random.PRNGKey(0))
+    batch = m.make_inputs(TRAIN)
+    loss, metrics = jax.jit(lambda p, b: m.loss(p, b))(params, batch)
+    assert loss.shape == ()
+    assert jnp.isfinite(loss), (name, loss)
+    assert jnp.isfinite(metrics["ce"])
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_prefill_and_decode_smoke(name):
+    arch = get_arch(name, smoke=True)
+    m = Model(arch, RUN)
+    params = m.init_params(jax.random.PRNGKey(0))
+    logits, caches = jax.jit(lambda p, b: m.prefill(p, b))(params, m.make_inputs(PREFILL))
+    assert logits.shape == (2, arch.padded_vocab)
+    assert jnp.all(jnp.isfinite(logits)), name
+    batch = {"tokens": jnp.ones((2, 1), jnp.int32),
+             "cache_len": jnp.asarray(31, jnp.int32)}
+    dlogits, new_caches = jax.jit(lambda p, c, b: m.decode_step(p, c, b))(params, caches, batch)
+    assert dlogits.shape == (2, arch.padded_vocab)
+    assert jnp.all(jnp.isfinite(dlogits)), name
+    assert jax.tree.structure(caches) == jax.tree.structure(new_caches)
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_full_config_matches_assignment(name):
+    """The FULL configs carry the assignment sheet's numbers exactly."""
+    arch = FULL[name]
+    sheet = {
+        "internvl2-26b": (48, 6144, 48, 8, 16384, 92553),
+        "rwkv6-7b": (32, 4096, None, None, 14336, 65536),
+        "llama3.2-1b": (16, 2048, 32, 8, 8192, 128256),
+        "gemma2-9b": (42, 3584, 16, 8, 14336, 256000),
+        "qwen2-72b": (80, 8192, 64, 8, 29568, 152064),
+        "gemma3-1b": (26, 1152, 4, 1, 6912, 262144),
+        "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+        "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064),
+        "jamba-1.5-large-398b": (72, 8192, 64, 8, 24576, 65536),
+        "whisper-tiny": (4, 384, 6, 6, 1536, 51865),
+    }[name]
+    layers, d, hq, hkv, ff, vocab = sheet
+    assert arch.num_layers == layers
+    assert arch.d_model == d
+    if hq is not None:
+        assert arch.num_heads == hq and arch.num_kv_heads == hkv
+    assert arch.d_ff == ff and arch.vocab_size == vocab
+    # structural coherence: the scan decomposition must tile the stack
+    assert arch.num_layers % structural_period(arch) == 0
+
+
+def test_moe_configs():
+    a = FULL["llama4-maverick-400b-a17b"]
+    assert a.num_experts == 128 and a.experts_per_token == 1
+    b = FULL["phi3.5-moe-42b-a6.6b"]
+    assert b.num_experts == 16 and b.experts_per_token == 2
+    j = FULL["jamba-1.5-large-398b"]
+    assert j.num_experts == 16 and j.experts_per_token == 2
+    # jamba interleave: 1 attn : 7 mamba
+    kinds = [k for k, _ in j.layer_kinds()]
+    assert kinds[:8] == ["attn"] + ["mamba"] * 7
+
+
+def test_param_counts_in_range():
+    """Analytic parameter counts land near the marketing sizes."""
+    approx = {
+        "qwen2-72b": (65e9, 80e9),
+        "llama3.2-1b": (1.0e9, 1.6e9),
+        "gemma2-9b": (8e9, 11e9),
+        "jamba-1.5-large-398b": (350e9, 440e9),
+        "llama4-maverick-400b-a17b": (350e9, 450e9),
+        "phi3.5-moe-42b-a6.6b": (38e9, 46e9),
+        "rwkv6-7b": (6e9, 9e9),
+        "gemma3-1b": (0.8e9, 1.5e9),
+    }
+    for name, (lo, hi) in approx.items():
+        n = FULL[name].param_count()
+        assert lo <= n <= hi, (name, f"{n:.3g}")
+
+
+def test_active_params_moe():
+    a = FULL["llama4-maverick-400b-a17b"]
+    assert a.active_param_count() < 0.12 * a.param_count()
+    p = FULL["phi3.5-moe-42b-a6.6b"]
+    assert 0.1 < p.active_param_count() / p.param_count() < 0.35

@@ -1,0 +1,93 @@
+"""Checkpoint manager: roundtrip, async publish, keep-N GC, restart resume."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+def _state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (8, 16)), "b": jnp.zeros((16,))},
+        "opt": {"mu": {"w": jnp.ones((8, 16)), "b": jnp.zeros((16,))}},
+        "step": jnp.asarray(7, jnp.int32),
+    }
+
+
+def _equal(a, b):
+    return all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))
+    )
+
+
+def test_roundtrip_blocking(tmp_path):
+    m = CheckpointManager(tmp_path, async_save=False)
+    s = _state()
+    m.save(7, s)
+    r = m.restore(s)
+    assert _equal(s, r)
+
+
+def test_async_save_and_wait(tmp_path):
+    m = CheckpointManager(tmp_path, async_save=True)
+    s = _state(1)
+    m.save(3, s)
+    m.wait()
+    assert m.latest_step() == 3
+    assert _equal(s, m.restore(s))
+
+
+def test_keep_n_gc(tmp_path):
+    m = CheckpointManager(tmp_path, keep_n=2, async_save=False)
+    s = _state()
+    for step in (1, 2, 3, 4):
+        m.save(step, s)
+    assert m.steps() == [3, 4]
+
+
+def test_restore_specific_step(tmp_path):
+    m = CheckpointManager(tmp_path, keep_n=5, async_save=False)
+    s1, s2 = _state(1), _state(2)
+    m.save(1, s1)
+    m.save(2, s2)
+    assert _equal(s1, m.restore(s1, step=1))
+    assert _equal(s2, m.restore(s2, step=2))
+
+
+def test_atomicity_no_tmp_left(tmp_path):
+    m = CheckpointManager(tmp_path, async_save=False)
+    m.save(9, _state())
+    assert not list(tmp_path.glob("*.tmp"))
+    assert (tmp_path / "step_00000009" / "manifest.json").exists()
+
+
+def test_restore_onto_different_mesh_subprocess(subproc):
+    """Elastic re-shard: save on a (4,2) mesh, restore onto (2,2) of a
+    4-device world — the cross-topology checkpoint move."""
+    out = subproc(
+        """
+import jax, jax.numpy as jnp, numpy as np, tempfile
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.checkpoint.manager import CheckpointManager
+from repro.ft.elastic import make_elastic_mesh
+
+mesh8 = make_elastic_mesh(8, prefer_model=2)
+w = jnp.arange(8*16, dtype=jnp.float32).reshape(8, 16)
+sh = NamedSharding(mesh8, P("data", "model"))
+state = {"w": jax.device_put(w, sh)}
+d = tempfile.mkdtemp()
+m = CheckpointManager(d, async_save=False)
+m.save(1, state)
+
+mesh4 = make_elastic_mesh(4, prefer_model=2)  # lost half the fleet
+restored = m.restore(state, shardings={"w": P("data", "model")}, mesh=mesh4)
+assert np.array_equal(np.asarray(restored["w"]), np.asarray(w))
+assert restored["w"].sharding.mesh.devices.size == 4
+print("RESHARD_OK")
+""",
+        devices=8,
+    )
+    assert "RESHARD_OK" in out

@@ -1,0 +1,97 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (interpret=True
+executes the Pallas kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rwkv6.ops import wkv6
+from repro.kernels.rwkv6.ref import wkv6_ref
+from repro.kernels.ssm_scan.ops import selective_scan
+from repro.kernels.ssm_scan.ref import ssm_scan_ref
+
+
+# ------------------------------------------------------------ flash attention
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-5), (jnp.bfloat16, 2e-2)])
+@pytest.mark.parametrize("b,s,hq,hkv,dh,causal,window,cap,bq,bkv", [
+    (2, 256, 4, 2, 64, True, 0, 0.0, 128, 128),
+    (1, 384, 4, 1, 128, True, 128, 50.0, 128, 128),
+    (2, 256, 8, 8, 64, False, 0, 0.0, 128, 256),
+    (1, 200, 4, 2, 64, True, 0, 0.0, 128, 128),   # padded tail
+    (1, 512, 2, 2, 64, True, 0, 0.0, 256, 128),   # asymmetric tiles
+])
+def test_flash_attention_sweep(dtype, tol, b, s, hq, hkv, dh, causal, window, cap, bq, bkv):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, s, hq, dh), dtype)
+    k = jax.random.normal(ks[1], (b, s, hkv, dh), dtype)
+    v = jax.random.normal(ks[2], (b, s, hkv, dh), dtype)
+    out = flash_attention(
+        q.astype(jnp.float32) * dh**-0.5, k, v, causal=causal, window=window,
+        softcap_val=cap, block_q=bq, block_kv=bkv, interpret=True,
+    )
+    ref = attention_ref(q, k, v, causal=causal, window=window, softcap=cap)
+    err = jnp.max(jnp.abs(out.astype(jnp.float32) - ref.astype(jnp.float32)))
+    assert err < tol, float(err)
+
+
+def test_flash_attention_rejects_traced_window():
+    q = jnp.zeros((1, 128, 2, 64))
+    with pytest.raises(ValueError):
+        jax.jit(lambda w: flash_attention(q, q, q, window=w, interpret=True))(
+            jnp.asarray(4)
+        )
+
+
+# ---------------------------------------------------------------------- wkv6
+
+
+@pytest.mark.parametrize("chunk", [32, 64])
+@pytest.mark.parametrize("b,s,h,hd", [(2, 160, 3, 32), (1, 64, 2, 64), (1, 130, 1, 16)])
+def test_wkv6_sweep(chunk, b, s, h, hd):
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    r, k, v = (0.5 * jax.random.normal(ks[i], (b, s, h, hd)) for i in range(3))
+    logw = -jnp.exp(0.3 * jax.random.normal(ks[3], (b, s, h, hd)))
+    u = 0.3 * jax.random.normal(ks[4], (h, hd))
+    out = wkv6(r, k, v, logw, u, chunk=chunk, interpret=True)
+    ref = wkv6_ref(r, k, v, logw, u)
+    rel = jnp.max(jnp.abs(out - ref)) / (jnp.max(jnp.abs(ref)) + 1e-9)
+    assert rel < 1e-4, float(rel)
+
+
+def test_wkv6_matches_model_path():
+    """The kernel math must agree with the chunked lax.scan used inside
+    repro.models.rwkv6.time_mix (same factorization)."""
+    from repro.configs.archs import get_arch
+    from repro.models import rwkv6 as model_rwkv
+
+    arch = get_arch("rwkv6-7b", smoke=True)
+    b, s, d = 2, 96, arch.d_model
+    h, hd = d // arch.rwkv_head_dim, arch.rwkv_head_dim
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    r, k, v = (0.5 * jax.random.normal(ks[i], (b, s, h, hd)) for i in range(3))
+    logw = -jnp.exp(0.3 * jax.random.normal(ks[3], (b, s, h, hd)))
+    u = 0.3 * jax.random.normal(ks[4], (h, hd))
+    out_kernel = wkv6(r, k, v, logw, u, chunk=32, interpret=True)
+    out_ref = wkv6_ref(r, k, v, logw, u)
+    assert jnp.max(jnp.abs(out_kernel - out_ref)) / (jnp.max(jnp.abs(out_ref)) + 1e-9) < 1e-4
+
+
+# ------------------------------------------------------------------ ssm scan
+
+
+@pytest.mark.parametrize("chunk,dblk", [(32, 32), (64, 16)])
+@pytest.mark.parametrize("b,s,di,n", [(2, 100, 64, 8), (1, 64, 32, 16)])
+def test_ssm_scan_sweep(chunk, dblk, b, s, di, n):
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    dt = jax.nn.softplus(jax.random.normal(ks[0], (b, s, di)))
+    u = jax.random.normal(ks[1], (b, s, di))
+    bt = jax.random.normal(ks[2], (b, s, n))
+    ct = jax.random.normal(ks[3], (b, s, n))
+    a = -jnp.exp(0.3 * jax.random.normal(ks[4], (di, n)))
+    y = selective_scan(dt, u, bt, ct, a, chunk=chunk, d_block=dblk, interpret=True)
+    ref = ssm_scan_ref(dt, u, bt, ct, a)
+    rel = jnp.max(jnp.abs(y - ref)) / (jnp.max(jnp.abs(ref)) + 1e-9)
+    assert rel < 1e-4, float(rel)

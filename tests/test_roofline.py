@@ -1,0 +1,135 @@
+"""Roofline machinery: HLO collective parser (property-based), wire-byte
+model, cost extrapolation algebra, TPU memory estimator."""
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.hlo import CollectiveStats, parse_collectives
+from repro.core.roofline import (CostTerms, PEAK_FLOPS, Roofline, collective_time,
+                                 estimate_tpu_hbm, model_flops)
+
+HLO = """
+HloModule jit_step
+%fused (p: f32[16,128]) -> f32[16,128] { ROOT %x = f32[16,128] parameter(0) }
+ENTRY %main {
+  %ag = f32[8,1024]{1,0} all-gather(%a), channel_id=1, replica_groups=[32,16]<=[512], dimensions={1}
+  %ar = bf16[4,256]{1,0} all-reduce(%b), channel_id=2, replica_groups=[16,32]<=[16,2,16]T(1,0,2), to_apply=%add
+  %rs = f32[2,64]{1,0} reduce-scatter(%c), channel_id=3, replica_groups=[32,16]<=[512], dimensions={0}
+  %cp = bf16[128]{0} collective-permute(%d), source_target_pairs={{0,1},{1,0}}
+  %a2a = s8[64,64]{1,0} all-to-all(%e), channel_id=5, replica_groups=[64,8]<=[512], dimensions={0}
+  %ard = f32[] all-reduce(%f), channel_id=6, replica_groups={{0,1}}, to_apply=%add
+}
+"""
+
+
+def test_parser_counts_and_bytes():
+    s = parse_collectives(HLO)
+    assert s.count == 6
+    assert s.counts_by_op["all-gather"] == 1
+    assert s.counts_by_op["all-reduce"] == 2
+    # all-gather: result 8*1024*4 = 32768 B, g=16 -> (15/16)*32768
+    assert abs(s.by_op["all-gather"] - 32768 * 15 / 16) < 1e-6
+    # reduce-scatter: result 2*64*4=512 B, g=16 -> (g-1)*512
+    assert abs(s.by_op["reduce-scatter"] - 15 * 512) < 1e-6
+    # collective-permute: result bytes exactly
+    assert abs(s.by_op["collective-permute"] - 128 * 2) < 1e-6
+    # group sizes recorded: 16 (×3), 32, 2, 8, and 1 (collective-permute has
+    # source-target pairs, not replica groups)
+    assert set(int(k) for k in s.by_group_size) == {16, 32, 2, 8, 1}
+
+
+def test_parser_ignores_non_collectives():
+    s = parse_collectives("%x = f32[8] add(%a, %b)\n%y = f32[8] fusion(%x), calls=%all-reduce-like")
+    assert s.count == 0
+
+
+@given(
+    g=st.integers(2, 512),
+    elems=st.integers(1, 4096),
+    dtype=st.sampled_from([("f32", 4), ("bf16", 2), ("s8", 1)]),
+)
+@settings(max_examples=100, deadline=None)
+def test_property_wire_bytes_model(g, elems, dtype):
+    name, size = dtype
+    line = f"  %ar = {name}[{elems}] all-reduce(%x), replica_groups=[{512//g if 512%g==0 else 1},{g}]<=[512], to_apply=%a\n"
+    s = parse_collectives(line)
+    expect = 2 * (g - 1) / g * elems * size
+    assert abs(s.wire_bytes - expect) < 1e-6
+    # wire bytes are monotone in group size for fixed payload
+    s2 = parse_collectives(line.replace(f",{g}]", f",{max(g//2,1)}]") if g >= 4 else line)
+    assert s2.wire_bytes <= s.wire_bytes + 1e-9
+
+
+def test_cost_terms_algebra():
+    a = CostTerms(100.0, 1000.0, parse_collectives(HLO))
+    b = CostTerms(40.0, 400.0, CollectiveStats())
+    d = a - b
+    assert d.flops == 60.0 and d.bytes_accessed == 600.0
+    s = d.scaled(3.0)
+    assert s.flops == 180.0
+    assert abs(s.collectives.wire_bytes - 3 * a.collectives.wire_bytes) < 1e-6
+
+
+def test_extrapolation_algebra_recovers_linear_model():
+    """cost(G) = c0 + G·c_l must be exactly recovered from two probes."""
+    c0, cl = 7.0, 3.0
+    a1 = CostTerms(c0 + cl, 0.0, CollectiveStats())
+    a2 = CostTerms(c0 + 2 * cl, 0.0, CollectiveStats())
+    c_layer = a2 - a1
+    full = (a1 - c_layer) + c_layer.scaled(80)
+    assert abs(full.flops - (c0 + 80 * cl)) < 1e-9
+
+
+def test_collective_time_uses_dci_for_pod_groups():
+    s = CollectiveStats()
+    s.add("all-reduce", 2, 1e9)  # pod-sized group
+    s.add("all-reduce", 16, 1e9)  # ici group
+    t_single = collective_time(s, n_pods=1)
+    t_multi = collective_time(s, n_pods=2)
+    assert t_multi > t_single  # DCI is slower than ICI
+
+
+def test_model_flops_train_vs_serve():
+    from repro.configs.archs import get_arch
+    from repro.configs.base import SHAPES
+
+    arch = get_arch("llama3.2-1b")
+    t = model_flops(arch, SHAPES["train_4k"])
+    p = model_flops(arch, SHAPES["prefill_32k"])
+    d = model_flops(arch, SHAPES["decode_32k"])
+    assert t == pytest.approx(6 * arch.param_count() * 4096 * 256)
+    assert p == pytest.approx(2 * arch.param_count() * 32768 * 32)
+    assert d == pytest.approx(2 * arch.param_count() * 128)
+
+
+def test_roofline_bottleneck_and_mfu():
+    r = Roofline(t_compute=1.0, t_memory=2.0, t_collective=0.5,
+                 model_flops_global=PEAK_FLOPS * 256, hlo_flops_global=PEAK_FLOPS * 256 * 2,
+                 n_chips=256)
+    assert r.bottleneck == "memory"
+    assert r.t_step == 2.0
+    assert r.useful_flops_ratio == pytest.approx(0.5)
+    assert r.roofline_fraction == pytest.approx(0.5)  # 1s ideal / 2s step
+
+
+def test_tpu_hbm_estimator_directionality():
+    """More microbatching -> less activation memory; fsdp -> less param memory."""
+    from repro.configs.archs import get_arch
+    from repro.configs.base import SHAPES, RunConfig
+    from repro.launch.mesh import make_host_mesh
+
+    arch = get_arch("qwen2-72b")
+    shape = SHAPES["train_4k"]
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+
+        class devices:
+            shape = (16, 16)
+            size = 256
+
+    base = estimate_tpu_hbm(arch, RunConfig(), shape, FakeMesh)
+    micro = estimate_tpu_hbm(arch, RunConfig(microbatch_size=16), shape, FakeMesh)
+    assert micro["carries_gib"] < base["carries_gib"]
+    no_zero = estimate_tpu_hbm(arch, RunConfig(zero_sharding="none"), shape, FakeMesh)
+    assert no_zero["params_gib"] > base["params_gib"]

@@ -1,0 +1,71 @@
+"""WordCount (the paper's benchmark job): correctness across the knob space
+(property-based) and the measured knob effects the reproduction relies on."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.apps.wordcount import (WORDCOUNT_SPACE, build_wordcount, make_corpus,
+                                  wordcount_reference)
+
+CORPUS = make_corpus(1 << 16)
+REF = wordcount_reference(np.asarray(CORPUS))
+
+
+def test_default_config_correct():
+    out = np.asarray(build_wordcount({}, CORPUS)())
+    assert (out == REF).all()
+
+
+@given(
+    num_map_tasks=st.sampled_from([2, 4, 8, 16]),
+    block_tokens=st.sampled_from([4096, 16384, 65536]),
+    compress=st.booleans(),
+    num_reduces=st.integers(1, 4),
+    sort_factor=st.sampled_from([5, 10, 40, 80]),
+    replication=st.integers(1, 3),
+    sort_buffer=st.sampled_from([2048, 8192, 32768]),
+)
+@settings(max_examples=12, deadline=None)
+def test_property_any_config_counts_correctly(
+    num_map_tasks, block_tokens, compress, num_reduces, sort_factor, replication, sort_buffer
+):
+    """System invariant: EVERY legal configuration computes the same counts —
+    tuning changes time, never results (the paper's correctness contract)."""
+    cfg = {
+        "num_map_tasks": num_map_tasks,
+        "block_tokens": block_tokens,
+        "map_output_compress": compress,
+        "num_reduces": num_reduces,
+        "sort_factor": sort_factor,
+        "replication": replication,
+        "sort_buffer_tokens": sort_buffer,
+    }
+    out = np.asarray(build_wordcount(cfg, CORPUS)())
+    assert (out == REF).all(), cfg
+
+
+def test_replication_knob_costs_time():
+    """dfs.replication=3 (default) must be measurably slower than 1 — the
+    effect the paper's Table IV tuning exploits."""
+    import time
+
+    big = make_corpus(1 << 20)
+
+    def _time(job, n=3):
+        ts = []
+        for _ in range(n):
+            t0 = time.perf_counter()
+            job()
+            ts.append(time.perf_counter() - t0)
+        return min(ts)
+
+    j3 = build_wordcount({"replication": 3}, big); j3()  # warmup/compile
+    j1 = build_wordcount({"replication": 1}, big); j1()
+    t3, t1 = _time(j3), _time(j1)
+    assert t3 > 1.5 * t1, (t3, t1)
+
+
+def test_space_has_twelve_params_like_table_one():
+    assert len(WORDCOUNT_SPACE.params) == 12
+    assert set(WORDCOUNT_SPACE.most_influential) <= set(WORDCOUNT_SPACE.names())

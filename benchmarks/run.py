@@ -31,7 +31,13 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="defaults + roofline only")
     ap.add_argument("--skip-lm", action="store_true", help="wordcount platform only")
+    ap.add_argument("--jobs", type=int, default=1,
+                    help="parallel trials per batch (TrialScheduler thread pool)")
+    ap.add_argument("--cache", type=Path, default=None,
+                    help="persistent JSONL evaluation cache — a warm re-run "
+                         "of the search tables performs no fresh evaluations")
     args = ap.parse_args(argv)
+    tables.ENGINE.update(max_workers=args.jobs, cache_path=args.cache)
 
     t0 = time.time()
     all_rows = []

@@ -13,6 +13,15 @@ from benchmarks import platforms
 
 RESULTS = Path("results/benchmarks")
 
+# Engine options (TrialScheduler kwargs) applied to every table run —
+# benchmarks.run sets these from --jobs / --cache so the whole suite shares
+# one thread-pool size and one persistent evaluation cache.
+ENGINE: Dict[str, Any] = {}
+
+
+def _scheduler_opts() -> Dict[str, Any]:
+    return {k: v for k, v in ENGINE.items() if v is not None}
+
 
 def _eval_for(platform: str):
     if platform == "wordcount":
@@ -29,7 +38,7 @@ def _actives(platform: str):
 
 def table_defaults(platform: str) -> List[Dict[str, Any]]:
     ev, space = _eval_for(platform)
-    cmpe = CMPE(ev, platform=platform)
+    cmpe = CMPE(ev, platform=platform, **_scheduler_opts())
     t = cmpe.evaluate(space.defaults(), tag="defaults")
     return [{"table": "III" if platform == "wordcount" else "VI",
              "platform": platform, "config": "all-defaults", "time_s": round(t, 4)}]
@@ -48,7 +57,7 @@ def one_opt_candidates(space, name):
 
 def table_one_opt(platform: str) -> List[Dict[str, Any]]:
     ev, space = _eval_for(platform)
-    cmpe = CMPE(ev, platform=platform)
+    cmpe = CMPE(ev, platform=platform, **_scheduler_opts())
     base = space.defaults()
     t_default = cmpe.evaluate(base, tag="defaults")
     rows = []
@@ -82,7 +91,7 @@ def table_all_opt(platform: str) -> List[Dict[str, Any]]:
     if not path.exists():
         table_one_opt(platform)
     prior = json.loads(path.read_text())
-    cmpe = CMPE(ev, platform=platform)
+    cmpe = CMPE(ev, platform=platform, **_scheduler_opts())
     t_default = cmpe.evaluate(space.defaults(), tag="defaults")
     config = space.snap({**space.defaults(), **prior["best_values"]})
     t = cmpe.evaluate(config, tag="all_opt")
@@ -100,7 +109,7 @@ def table_gsft(platform: str) -> List[Dict[str, Any]]:
     out: TuneOutcome = tune(
         platform if platform in ("train", "serve") else "train", "gsft", ev,
         space=space, active_params=_actives(platform), samples_per_param=3,
-        log_path=RESULTS / f"gsft_{platform}.jsonl",
+        log_path=RESULTS / f"gsft_{platform}.jsonl", **_scheduler_opts(),
     )
     (RESULTS / f"gsft_{platform}.json").write_text(json.dumps(out.summary(), indent=1, default=str))
     return [{"table": "IX" if platform == "wordcount" else "X",
@@ -119,7 +128,7 @@ def table_crs(platform: str) -> List[Dict[str, Any]]:
     out = tune(
         platform if platform in ("train", "serve") else "train", "crs", ev,
         space=space, m=10, k=3, max_rounds=4, seed=0,
-        log_path=RESULTS / f"crs_{platform}.jsonl",
+        log_path=RESULTS / f"crs_{platform}.jsonl", **_scheduler_opts(),
     )
     (RESULTS / f"crs_{platform}.json").write_text(json.dumps(out.summary(), indent=1, default=str))
     return [{"table": "XI" if platform == "wordcount" else "XII",

@@ -1,0 +1,117 @@
+"""JAX version compatibility layer.
+
+The repo targets the current JAX API (``jax.set_mesh``, ``jax.shard_map``,
+``jax.sharding.AxisType``); the pinned container ships jax 0.4.x where those
+names either do not exist or take different keywords. Every module that
+touches mesh construction, ambient-mesh contexts, or partial-manual
+``shard_map`` goes through this shim so the same source runs on both.
+
+Exports
+  AxisType        — ``jax.sharding.AxisType`` or ``None`` when unavailable
+  mesh_kwargs(n)  — ``{"axis_types": (AxisType.Auto,) * n}`` or ``{}``
+  make_mesh       — ``jax.make_mesh`` with axis_types only when supported
+  set_mesh        — ambient-mesh context manager (falls back to ``with mesh:``)
+  shard_map       — new-style keywords mapped onto the legacy
+                    ``jax.experimental.shard_map`` (axis_names→auto,
+                    check_vma→check_rep)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence
+
+import jax
+
+try:  # jax >= 0.5
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+except ImportError:  # jax 0.4.x
+    AxisType = None  # type: ignore[assignment]
+
+
+def mesh_kwargs(n_axes: int) -> Dict[str, Any]:
+    """axis_types kwargs for Mesh/make_mesh, empty on jax without AxisType."""
+    if AxisType is None:
+        return {}
+    return {"axis_types": (AxisType.Auto,) * n_axes}
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str], **kw):
+    """``jax.make_mesh`` passing axis_types only where the API accepts it."""
+    return jax.make_mesh(tuple(shape), tuple(axes), **mesh_kwargs(len(axes)), **kw)
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh.
+
+    New jax: ``jax.set_mesh(mesh)``. Old jax: ``Mesh`` is itself a context
+    manager that sets the thread-local physical mesh, which is what
+    PartitionSpec-valued ``in_shardings`` resolve against.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def axis_size(name: str):
+    """``jax.lax.axis_size`` fallback: psum of ones over the named axis."""
+    import jax.numpy as jnp
+
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(jnp.ones((), jnp.int32), name)
+
+
+# New jax resolves PartitionSpec-valued in_shardings against the ambient mesh
+# set by jax.set_mesh; 0.4.x jax.jit only accepts concrete Sharding objects.
+SUPPORTS_SPEC_SHARDINGS = hasattr(jax, "set_mesh")
+
+
+def concrete_shardings(tree, mesh):
+    """Resolve a PartitionSpec/None tree to NamedShardings where jax.jit
+    requires concrete Shardings (no-op on jax with ambient-mesh specs)."""
+    if SUPPORTS_SPEC_SHARDINGS or mesh is None:
+        return tree
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    def conv(x):
+        if x is None:
+            return NamedSharding(mesh, PartitionSpec())
+        if isinstance(x, PartitionSpec):
+            return NamedSharding(mesh, x)
+        return x
+
+    return jax.tree.map(
+        conv, tree, is_leaf=lambda x: x is None or isinstance(x, PartitionSpec)
+    )
+
+
+def shard_map(
+    f,
+    *,
+    mesh,
+    in_specs,
+    out_specs,
+    axis_names: Optional[Sequence[str]] = None,
+    check_vma: bool = True,
+):
+    """New-style ``jax.shard_map`` signature on either jax.
+
+    ``axis_names`` lists the axes the body is *manual* over; the legacy API
+    expresses the same thing inversely via ``auto`` (the axes left to GSPMD).
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f,
+            mesh=mesh,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            axis_names=set(axis_names) if axis_names is not None else None,
+            check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+    kw: Dict[str, Any] = {"check_rep": check_vma}
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+        if auto:
+            kw["auto"] = auto
+    return _legacy_shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)

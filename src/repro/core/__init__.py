@@ -1,9 +1,12 @@
 """The paper's contribution: auto-tuning of platform configuration parameters.
 
   - ``space``      — the curated 12-train / 11-serve knob tables (§III)
-  - ``cmpe``       — Configuration Manager & Performance Evaluator (§VII)
-  - ``grid_finer`` — Algorithm I: Grid Search with Finer Tuning (§VIII)
-  - ``crs``        — Algorithm II: Controlled Random Search (§IX)
+  - ``scheduler``  — TrialScheduler: batched/cached/pruned trial execution
+                     (grown from the paper's CMPE, §VII)
+  - ``cmpe``       — back-compat serial CMPE facade over the scheduler
+  - ``strategies`` — ask/tell Strategy engine: gsft, crs, hillclimb
+  - ``grid_finer`` — Algorithm I wrapper: Grid Search with Finer Tuning (§VIII)
+  - ``crs``        — Algorithm II wrapper: Controlled Random Search (§IX)
   - ``tuner``      — the Admin facade (Figure I)
   - ``evaluators`` — walltime (paper-faithful) / roofline (AOT) backends
   - ``roofline``   — TPU v5e roofline terms from compiled artifacts
@@ -12,21 +15,44 @@
 from repro.core.cmpe import CMPE, best_from_log, read_log
 from repro.core.crs import CRSResult, controlled_random_search
 from repro.core.grid_finer import GridResult, grid_search_finer_tuning
+from repro.core.scheduler import Trial, TrialScheduler, config_hash, config_key
 from repro.core.space import SERVE_SPACE, SPACES, TRAIN_SPACE, TunableSpace
+from repro.core.strategies import (
+    CRSStrategy,
+    CuratedHillclimbStrategy,
+    GridFinerStrategy,
+    HillclimbResult,
+    Move,
+    Strategy,
+    make_strategy,
+    register_strategy,
+)
 from repro.core.tuner import TuneOutcome, tune
 
 __all__ = [
     "CMPE",
     "CRSResult",
+    "CRSStrategy",
+    "CuratedHillclimbStrategy",
+    "GridFinerStrategy",
     "GridResult",
+    "HillclimbResult",
+    "Move",
     "SERVE_SPACE",
     "SPACES",
+    "Strategy",
     "TRAIN_SPACE",
+    "Trial",
+    "TrialScheduler",
     "TuneOutcome",
     "TunableSpace",
     "best_from_log",
+    "config_hash",
+    "config_key",
     "controlled_random_search",
     "grid_search_finer_tuning",
+    "make_strategy",
     "read_log",
+    "register_strategy",
     "tune",
 ]

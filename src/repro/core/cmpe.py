@@ -1,52 +1,42 @@
 """CMPE — Configuration Manager and Performance Evaluator (paper §VII).
 
-The abstraction layer between the search algorithms (GSFT / CRS) and the
-platform. The algorithms hand the CMPE a candidate configuration; the CMPE
+Back-compat facade: the implementation moved to
+:class:`repro.core.scheduler.TrialScheduler`, which adds concurrent batches,
+a persistent cross-session cache, per-trial timeout/retry, and early-stopping
+hooks. ``CMPE`` is the serial-defaults subclass keeping the original
+constructor signature and single-trial ``evaluate`` semantics:
 
-  1. applies it to the system (builds the RunConfig / mesh / step function —
-     the analog of rewriting Hadoop's XML config files and restarting the
-     daemons; "safe-mode off / delete the output dir" becomes clearing the
-     jit cache so every trial is isolated),
-  2. runs the job / evaluates the cell and measures execution time,
-  3. appends every trial to a **log file** (JSONL: timestamp, config, time,
-     evaluator detail) — the paper's provision for recovering the optimum and
-     tracing errors,
-  4. returns (execution_time, info) to the algorithm.
-
-Identical configurations are memoized (the evaluators here are deterministic;
-the paper re-ran jobs because cluster timings are noisy).
+  1. apply the candidate config to the system (the analog of rewriting
+     Hadoop's XML config files and restarting the daemons),
+  2. run the job and measure execution time,
+  3. append every trial to a JSONL log (the paper's provision for recovering
+     the optimum and tracing errors),
+  4. return the execution time to the algorithm; identical configurations
+     are memoized.
 """
 from __future__ import annotations
 
-import json
-import time
-from dataclasses import dataclass, field
 from pathlib import Path
-from typing import Any, Callable, Dict, List, Optional, Protocol, Tuple
+from typing import Optional
 
-INFEASIBLE = float("inf")
-
-
-class Evaluator(Protocol):
-    """config dict -> (execution time in seconds, info dict)."""
-
-    def __call__(self, config: Dict[str, Any]) -> Tuple[float, Dict[str, Any]]: ...
-
-
-@dataclass
-class Trial:
-    config: Dict[str, Any]
-    time_s: float
-    info: Dict[str, Any] = field(default_factory=dict)
-    wall_s: float = 0.0
-    error: Optional[str] = None
+from repro.core.scheduler import (  # noqa: F401 — re-exported legacy names
+    INFEASIBLE,
+    Evaluator,
+    Trial,
+    TrialScheduler,
+    _key,
+    best_from_log,
+    config_hash,
+    config_key,
+    read_log,
+)
 
 
-def _key(config: Dict[str, Any]) -> str:
-    return json.dumps(config, sort_keys=True, default=str)
+class CMPE(TrialScheduler):
+    """The paper's CMPE: a TrialScheduler pinned to serial, uncached-on-disk
+    evaluation (pass ``max_workers``/``cache_path`` to opt in to the engine
+    features; the ask/tell drivers do)."""
 
-
-class CMPE:
     def __init__(
         self,
         evaluator: Evaluator,
@@ -54,84 +44,12 @@ class CMPE:
         platform: str = "train",
         log_path: Optional[Path] = None,
         clear_caches_between_trials: bool = False,
+        **scheduler_kwargs,
     ):
-        self.evaluator = evaluator
-        self.platform = platform
-        self.log_path = Path(log_path) if log_path else None
-        self.clear_caches = clear_caches_between_trials
-        self.trials: List[Trial] = []
-        self._memo: Dict[str, Trial] = {}
-        if self.log_path:
-            self.log_path.parent.mkdir(parents=True, exist_ok=True)
-
-    # ------------------------------------------------------------------- api
-
-    def evaluate(self, config: Dict[str, Any], tag: str = "") -> float:
-        """Tune the platform to ``config``, run the job, return execution
-        time. Logs every call."""
-        key = _key(config)
-        if key in self._memo:
-            trial = self._memo[key]
-            self._log(trial, tag=tag, cached=True)
-            return trial.time_s
-
-        if self.clear_caches:
-            import jax
-
-            jax.clear_caches()  # trial isolation (paper: config rewrite + restart)
-
-        t0 = time.time()
-        try:
-            t, info = self.evaluator(config)
-            trial = Trial(dict(config), float(t), info, wall_s=time.time() - t0)
-        except Exception as e:  # noqa: BLE001 — a failed run is a logged trial
-            trial = Trial(dict(config), INFEASIBLE, {}, wall_s=time.time() - t0,
-                          error=f"{type(e).__name__}: {e}")
-        self.trials.append(trial)
-        self._memo[key] = trial
-        self._log(trial, tag=tag, cached=False)
-        return trial.time_s
-
-    def best(self) -> Trial:
-        ok = [t for t in self.trials if t.error is None]
-        if not ok:
-            raise RuntimeError("no successful trials")
-        return min(ok, key=lambda t: t.time_s)
-
-    @property
-    def num_evaluations(self) -> int:
-        return len(self.trials)
-
-    # ------------------------------------------------------------------- log
-
-    def _log(self, trial: Trial, tag: str, cached: bool):
-        if not self.log_path:
-            return
-        rec = {
-            "ts": time.time(),
-            "platform": self.platform,
-            "tag": tag,
-            "cached": cached,
-            "config": trial.config,
-            "time_s": trial.time_s,
-            "wall_s": trial.wall_s,
-            "error": trial.error,
-            "info": {k: v for k, v in trial.info.items() if isinstance(v, (int, float, str, bool))},
-        }
-        with self.log_path.open("a") as f:
-            f.write(json.dumps(rec, default=str) + "\n")
-
-
-def read_log(path: Path) -> List[Dict[str, Any]]:
-    """Recover trials from a CMPE log file (the paper's 'analyzing the log
-    file helps in finding the optimal configuration')."""
-    out = []
-    for line in Path(path).read_text().splitlines():
-        if line.strip():
-            out.append(json.loads(line))
-    return out
-
-
-def best_from_log(path: Path) -> Dict[str, Any]:
-    recs = [r for r in read_log(path) if r.get("error") is None]
-    return min(recs, key=lambda r: r["time_s"])
+        super().__init__(
+            evaluator,
+            platform=platform,
+            log_path=log_path,
+            clear_caches_between_trials=clear_caches_between_trials,
+            **scheduler_kwargs,
+        )

@@ -1,64 +1,31 @@
 """Algorithm II — Controlled Random Search (paper §IX), faithful.
 
-Inner routine ``random_search``: draw m uniform configurations within the
-current per-parameter bounds, evaluate through the CMPE, keep the top-k by
-execution time. Outer loop (after W.L. Price): contract each numeric
-parameter's bounds to [min, max] of the survivors, re-run the random search,
-and stop when the round-over-round improvement of the best time falls below a
-threshold. Complexity O(n·m) evaluations.
+Back-compat wrapper: the algorithm now lives in
+:class:`repro.core.strategies.crs.CRSStrategy` (ask/tell) and runs through
+the :class:`~repro.core.scheduler.TrialScheduler`. A round's m draws are
+generated before any is evaluated (the rng never observes results
+mid-round), so serial and parallel execution produce identical draw
+sequences and the wrapper is bit-compatible with the legacy loop.
 
-Booleans/categoricals are drawn uniformly from their choice set each round
-(the paper: "randomly, either TRUE or FALSE is chosen"), then *frozen* to the
-survivor majority once bounds contract — the closest faithful reading of
-"minimum and maximum of each parameter" for non-numeric values.
+Inner routine: draw m uniform configurations within the current
+per-parameter bounds, keep the top-k by execution time. Outer loop (after
+W.L. Price): contract each numeric parameter's bounds to [min, max] of the
+survivors, freeze booleans/categoricals to the survivor majority, re-run,
+stop when round-over-round improvement falls below the threshold.
+Complexity O(n·m) evaluations.
 """
 from __future__ import annotations
 
-import random
-from collections import Counter
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, Optional
 
-from repro.core.cmpe import CMPE
-from repro.core.space import CatParam, TunableSpace
-
-
-@dataclass
-class CRSResult:
-    best_config: Dict[str, Any]
-    best_time: float
-    rounds: int
-    evaluations: int
-    bound_history: List[Dict[str, Any]] = field(default_factory=list)
-
-
-def _random_config(space, bounds, frozen, rng) -> Dict[str, Any]:
-    cfg = {}
-    for p in space.params:
-        if p.name in frozen:
-            cfg[p.name] = frozen[p.name]
-        elif p.numeric:
-            lo, hi = bounds[p.name]
-            cfg[p.name] = p.sample(rng, lo, hi)
-        else:
-            cfg[p.name] = p.sample(rng)
-    return cfg
-
-
-def _random_search(space, cmpe, bounds, frozen, rng, m, k, fixed, tag):
-    """Paper's ``random_search``: m draws, keep top-k (config, time)."""
-    results: List[Tuple[Dict[str, Any], float]] = []
-    for _ in range(m):
-        cfg = {**_random_config(space, bounds, frozen, rng), **fixed}
-        t = cmpe.evaluate(cfg, tag=tag)
-        results.append((cfg, t))
-    results.sort(key=lambda ct: ct[1])
-    return results[:k]
+from repro.core.scheduler import TrialScheduler
+from repro.core.space import TunableSpace
+from repro.core.strategies.crs import CRSResult, CRSStrategy, _random_config  # noqa: F401
 
 
 def controlled_random_search(
     space: TunableSpace,
-    cmpe: CMPE,
+    cmpe: TrialScheduler,
     *,
     fixed: Optional[Dict[str, Any]] = None,
     m: int = 12,
@@ -66,45 +33,11 @@ def controlled_random_search(
     threshold: float = 0.0,
     max_rounds: int = 6,
     seed: int = 0,
+    batch_size: Optional[int] = None,
+    patience: Optional[int] = None,
 ) -> CRSResult:
-    rng = random.Random(seed)
-    fixed = dict(fixed or {})
-    numeric = [p for p in space.params if p.numeric and p.name not in fixed]
-    bounds = {p.name: (p.lo, p.hi) for p in numeric}
-    frozen: Dict[str, Any] = {}
-    history = [dict(bounds)]
-
-    survivors = _random_search(space, cmpe, bounds, frozen, rng, m, k, fixed, "crs/round0")
-    best_config, best_time = survivors[0]
-    rounds = 1
-
-    while rounds < max_rounds:
-        # contract bounds to the survivors' [min, max] per numeric parameter
-        for p in numeric:
-            vals = [c[p.name] for c, _ in survivors]
-            bounds[p.name] = (min(vals), max(vals))
-        # freeze categoricals to the survivor majority
-        for p in space.params:
-            if not p.numeric and p.name not in fixed:
-                maj = Counter(c[p.name] for c, _ in survivors).most_common(1)[0][0]
-                frozen[p.name] = maj
-        history.append(dict(bounds))
-
-        survivors = _random_search(
-            space, cmpe, bounds, frozen, rng, m, k, fixed, f"crs/round{rounds}"
-        )
-        new_best_config, new_best_time = survivors[0]
-        rounds += 1
-        improvement = best_time - new_best_time
-        if new_best_time < best_time:
-            best_config, best_time = new_best_config, new_best_time
-        if improvement <= threshold:
-            break  # variation fell below the threshold (paper's stop rule)
-
-    return CRSResult(
-        best_config=best_config,
-        best_time=best_time,
-        rounds=rounds,
-        evaluations=cmpe.num_evaluations,
-        bound_history=history,
+    strategy = CRSStrategy(
+        space, fixed=fixed, m=m, k=k, threshold=threshold,
+        max_rounds=max_rounds, seed=seed,
     )
+    return cmpe.run(strategy, batch_size=batch_size, patience=patience)

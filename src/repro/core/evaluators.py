@@ -22,6 +22,7 @@ import time
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional, Tuple
 
+from repro.compat import set_mesh as compat_set_mesh
 from repro.configs.base import ArchConfig, RunConfig, ShapeConfig
 from repro.core import roofline as rl
 from repro.core.space import TunableSpace
@@ -38,10 +39,16 @@ class FunctionEvaluator:
 @dataclass
 class WalltimeEvaluator:
     """builder(config) -> zero-arg callable running one full job; we time the
-    best of ``repeats`` runs after one warmup (compile) run."""
+    best of ``repeats`` runs after one warmup (compile) run.
+
+    ``parallel_safe`` is True: the TrialScheduler may fan a batch of these
+    over its thread pool (the paper's trials are independent jobs). Beware
+    that concurrent trials on one oversubscribed host contend for cores —
+    size ``max_workers`` to the machine, as you would cluster slots."""
 
     builder: Callable[[Dict[str, Any]], Callable[[], Any]]
     repeats: int = 3
+    parallel_safe: bool = True
 
     def __call__(self, config: Dict[str, Any]) -> Tuple[float, Dict[str, Any]]:
         job = self.builder(config)
@@ -56,6 +63,13 @@ class WalltimeEvaluator:
 
 @dataclass
 class RooflineEvaluator:
+    """AOT probe-compile + roofline. ``parallel_safe`` is False — probe
+    compilation mutates global XLA state, so the TrialScheduler keeps roofline
+    batches serial. Batch speed comes from the **probe-compile memo** instead:
+    distinct knob configs that resolve to the same (RunConfig × mesh) — knobs
+    the RunConfig doesn't consume, clamped mesh factors — reuse the compiled
+    probes and cost nothing beyond a dict lookup."""
+
     arch: ArchConfig
     shape: ShapeConfig
     space: TunableSpace
@@ -63,19 +77,32 @@ class RooflineEvaluator:
     chips: int = 256
     multi_pod: bool = False
     memory_penalty: str = "soft"  # soft | inf
+    parallel_safe: bool = False
+
+    def __post_init__(self):
+        self._probe_memo: Dict[Tuple[Any, int], Tuple[float, Dict[str, Any]]] = {}
 
     def __call__(self, config: Dict[str, Any]) -> Tuple[float, Dict[str, Any]]:
-        import jax
-
-        from repro.distributed.steps import make_step
-        from repro.launch.mesh import make_tuning_mesh
-
         run = self.space.to_run_config(config, self.base_run)
         mp = min(int(config.get("mesh_model_parallel", run.mesh_model_parallel)), self.chips)
         run = run.replace(mesh_model_parallel=mp)
+
+        memo_key = (run, mp)
+        hit = self._probe_memo.get(memo_key)
+        if hit is not None:
+            t, info = hit
+            return t, {**info, "probe_compile_reused": True}
+        t, info = self._evaluate(run, mp)
+        self._probe_memo[memo_key] = (t, info)
+        return t, info
+
+    def _evaluate(self, run: RunConfig, mp: int) -> Tuple[float, Dict[str, Any]]:
+        from repro.distributed.steps import make_step
+        from repro.launch.mesh import make_tuning_mesh
+
         mesh = make_tuning_mesh(mp, chips=self.chips, multi_pod=self.multi_pod)
 
-        with jax.set_mesh(mesh):
+        with compat_set_mesh(mesh):
             per_dev, probe_times = rl.extrapolated_costs(
                 self.arch, run, self.shape, mesh, make_step
             )

@@ -1,114 +1,47 @@
 """Algorithm I — Grid Search with Finer Tuning (paper §VIII), faithful.
 
-Phase 1 (grid): evenly-stepped samples of each *active* parameter (the paper
-shortlists 5 of the 12 Hadoop knobs for the grid because 10^12 cells is
-infeasible — we keep the same device), full cartesian product, every cell
-evaluated through the CMPE.
+Back-compat wrapper: the algorithm now lives in
+:class:`repro.core.strategies.gsft.GridFinerStrategy` (ask/tell) and runs
+through the :class:`~repro.core.scheduler.TrialScheduler`. Calling this
+function with a plain serial CMPE reproduces the legacy evaluation order,
+tags, and result exactly; calling it with a parallel/cached scheduler gets
+the engine features without touching the algorithm.
 
-Phase 2 (finer tuning): for each *most-influential* parameter, re-sample a
-tighter grid around the phase-1 optimum using the paper's bound arithmetic
-
-    new_lower = best_value − old_lower / 2
-    new_upper = best_value + old_lower / 2
-    increment = new_lower / 2
-
-(idiosyncratic — the finer window and step derive from the *old lower bound* —
-but reproduced exactly; bounds are snapped back into each parameter's legal
-range/step). All non-influential parameters are pinned at their phase-1 best.
-Complexity O(n·m + k) evaluations, as stated in the paper.
+The paper's phase arithmetic (finer window and step derived from the *old
+lower bound* — idiosyncratic but reproduced exactly) is documented in the
+strategy module. Complexity O(n·m + k) evaluations, as stated in the paper.
 """
 from __future__ import annotations
 
-import itertools
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, Optional, Sequence
 
-from repro.core.cmpe import CMPE
-from repro.core.space import Param, TunableSpace
-
-
-@dataclass
-class GridResult:
-    best_config: Dict[str, Any]
-    best_time: float
-    phase1_best: Dict[str, Any]
-    phase1_time: float
-    evaluations: int
-    grid_sizes: Dict[str, int] = field(default_factory=dict)
-
-
-def _param_grid_list(param_grid: Dict[str, List[Any]]) -> List[Dict[str, Any]]:
-    names = list(param_grid)
-    out = []
-    for combo in itertools.product(*(param_grid[n] for n in names)):
-        out.append(dict(zip(names, combo)))
-    return out
+from repro.core.scheduler import TrialScheduler
+from repro.core.space import TunableSpace
+from repro.core.strategies.gsft import GridFinerStrategy, GridResult  # noqa: F401
 
 
 def grid_search_finer_tuning(
     space: TunableSpace,
-    cmpe: CMPE,
+    cmpe: TrialScheduler,
     *,
     active_params: Optional[Sequence[str]] = None,
     fixed: Optional[Dict[str, Any]] = None,
     samples_per_param: int = 3,
     most_influential: Optional[Sequence[str]] = None,
     finer_samples: int = 5,
+    batch_size: Optional[int] = None,
+    patience: Optional[int] = None,
 ) -> GridResult:
     """Run Algorithm I. ``active_params``: knobs swept in the coarse grid
-    (default: the space's most-influential set plus any categorical knobs
-    worth a single extra axis is left to the caller — mirroring the paper's
-    manual shortlist). ``fixed``: knobs pinned to known-good values up front
-    (the paper pins dfs.replication=1, map.output.compress=TRUE)."""
-    defaults = space.defaults()
-    fixed = dict(fixed or {})
-    active = list(active_params or space.most_influential)
-    influential = list(most_influential or space.most_influential)
-
-    # ---- Phase 1: evenly-stepped coarse grid over the active knobs
-    param_grid: Dict[str, List[Any]] = {}
-    for name in active:
-        param_grid[name] = space.param(name).grid(samples_per_param)
-
-    base = {**defaults, **fixed}
-    best_config, min_time = None, float("inf")
-    for cell in _param_grid_list(param_grid):
-        config = {**base, **cell}
-        t = cmpe.evaluate(config, tag="gsft/grid")
-        if t < min_time:
-            min_time, best_config = t, config
-    phase1_best, phase1_time = dict(best_config), min_time
-
-    # ---- Phase 2: finer tuning around the best along the influential knobs
-    new_param_grid: Dict[str, List[Any]] = {}
-    for name in influential:
-        p = space.param(name)
-        if not p.numeric or name not in param_grid:
-            # categorical influential knobs keep their full choice set
-            new_param_grid[name] = p.grid(finer_samples)
-            continue
-        old_lower = float(param_grid[name][0])
-        best_value = float(best_config[name])
-        new_lower = best_value - old_lower / 2.0
-        new_upper = best_value + old_lower / 2.0
-        increment = max(new_lower / 2.0, 1e-9)
-        new_param_grid[name] = p.grid_between(new_lower, new_upper, increment)
-
-    # pin everything else at the phase-1 optimum (paper: "if param not in
-    # most_influential: new_param_grid[param] = best_config[param]")
-    pinned = {k: v for k, v in best_config.items() if k not in new_param_grid}
-
-    for cell in _param_grid_list(new_param_grid):
-        config = {**pinned, **cell}
-        t = cmpe.evaluate(config, tag="gsft/finer")
-        if t < min_time:
-            min_time, best_config = t, config
-
-    return GridResult(
-        best_config=best_config,
-        best_time=min_time,
-        phase1_best=phase1_best,
-        phase1_time=phase1_time,
-        evaluations=cmpe.num_evaluations,
-        grid_sizes={k: len(v) for k, v in {**param_grid, **new_param_grid}.items()},
+    (default: the space's most-influential set — mirroring the paper's manual
+    shortlist). ``fixed``: knobs pinned to known-good values up front (the
+    paper pins dfs.replication=1, map.output.compress=TRUE)."""
+    strategy = GridFinerStrategy(
+        space,
+        active_params=active_params,
+        fixed=fixed,
+        samples_per_param=samples_per_param,
+        most_influential=most_influential,
+        finer_samples=finer_samples,
     )
+    return cmpe.run(strategy, batch_size=batch_size, patience=patience)

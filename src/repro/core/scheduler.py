@@ -1,0 +1,368 @@
+"""TrialScheduler — the execution engine under every search strategy.
+
+The paper's CMPE (Configuration Manager and Performance Evaluator, §VII) ran
+one trial at a time: apply the config, run the job, log, return the time.
+This module grows that into a batched scheduler the ask/tell strategies
+(:mod:`repro.core.strategies`) drive:
+
+  - **concurrent batches** — ``evaluate_batch`` fans a strategy's batch over
+    a thread pool (wall-clock-bound evaluators like ``WalltimeEvaluator`` and
+    ``FunctionEvaluator`` parallelize; evaluators that mutate global compiler
+    state declare ``parallel_safe = False`` and run serially),
+  - **persistent cross-session cache** — a JSONL file keyed by the canonical
+    config hash; re-runs and resumed sessions replay trial times without a
+    single fresh evaluation,
+  - **per-trial timeout / retry / infeasible penalty** — a hung or crashing
+    trial becomes a logged infeasible trial instead of killing the session,
+  - **early stopping** — ``run(strategy, patience=k)`` kills a sweep when the
+    running best hasn't improved in k consecutive batches.
+
+Everything the old CMPE promised still holds: identical configs are memoized
+within a session, every trial (fresh, memoized, cached, failed) is appended
+to the JSONL log, and failures are trials, not exceptions.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import threading
+import time
+from concurrent.futures import CancelledError, ThreadPoolExecutor
+from concurrent.futures import TimeoutError as FutureTimeoutError
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Protocol, Sequence, Tuple
+
+INFEASIBLE = float("inf")
+
+
+class Evaluator(Protocol):
+    """config dict -> (execution time in seconds, info dict)."""
+
+    def __call__(self, config: Dict[str, Any]) -> Tuple[float, Dict[str, Any]]: ...
+
+
+@dataclass
+class Trial:
+    config: Dict[str, Any]
+    time_s: float
+    info: Dict[str, Any] = field(default_factory=dict)
+    wall_s: float = 0.0
+    error: Optional[str] = None
+    source: str = "fresh"  # fresh | cache (persistent) — memo hits reuse the Trial
+
+    @property
+    def ok(self) -> bool:
+        return self.error is None
+
+
+def config_key(config: Dict[str, Any]) -> str:
+    """Canonical JSON of the config — the memo/log identity of a trial."""
+    return json.dumps(config, sort_keys=True, default=str)
+
+
+def config_hash(config: Dict[str, Any]) -> str:
+    """Short stable hash of :func:`config_key` — the persistent-cache key."""
+    return hashlib.sha256(config_key(config).encode()).hexdigest()[:24]
+
+
+# legacy name used by the old cmpe module
+_key = config_key
+
+
+class TrialScheduler:
+    """Batched trial executor with memoization, persistence, and pruning.
+
+    ``max_workers=1`` (the default) reproduces the old CMPE behaviour
+    byte-for-byte: serial evaluation in ask order, identical log records.
+    """
+
+    def __init__(
+        self,
+        evaluator: Evaluator,
+        *,
+        platform: str = "train",
+        log_path: Optional[Path] = None,
+        clear_caches_between_trials: bool = False,
+        max_workers: int = 1,
+        cache_path: Optional[Path] = None,
+        timeout_s: Optional[float] = None,
+        retries: int = 0,
+        infeasible_time: float = INFEASIBLE,
+    ):
+        self.evaluator = evaluator
+        self.platform = platform
+        self.log_path = Path(log_path) if log_path else None
+        self.clear_caches = clear_caches_between_trials
+        self.max_workers = max(1, int(max_workers))
+        self.timeout_s = timeout_s
+        self.retries = max(0, int(retries))
+        self.infeasible_time = infeasible_time
+        self.trials: List[Trial] = []
+        self._memo: Dict[str, Trial] = {}
+        self._log_lock = threading.Lock()
+        # cache-accounting counters (the engine tests assert on these)
+        self.fresh_evaluations = 0
+        self.memo_hits = 0
+        self.cache_hits = 0
+        if self.log_path:
+            self.log_path.parent.mkdir(parents=True, exist_ok=True)
+        self.cache_path = Path(cache_path) if cache_path else None
+        self._persistent: Dict[str, Dict[str, Any]] = {}
+        if self.cache_path:
+            self._persistent = _load_cache(self.cache_path, self.platform)
+            self.cache_path.parent.mkdir(parents=True, exist_ok=True)
+
+    # ------------------------------------------------------------------- api
+
+    def evaluate(self, config: Dict[str, Any], tag: str = "") -> float:
+        """Tune the platform to ``config``, run the job, return execution
+        time. Logs every call (the one-trial path the old CMPE exposed)."""
+        return self.evaluate_batch([config], tag=tag)[0].time_s
+
+    def evaluate_batch(
+        self, configs: Sequence[Dict[str, Any]], tag: str = ""
+    ) -> List[Trial]:
+        """Evaluate a batch, returning one Trial per config **in input
+        order**. Duplicates (within the batch or vs. earlier batches) are
+        served from the memo; persistent-cache hits cost nothing fresh."""
+        keys = [config_key(c) for c in configs]
+        plan: List[Tuple[str, Dict[str, Any]]] = []  # unique keys needing a run
+        first_served = set()  # keys whose first occurrence is logged below
+        for k, c in zip(keys, configs):
+            if k in self._memo or k in first_served:
+                continue
+            hit = self._persistent.get(config_hash(c))
+            if hit is not None:
+                trial = Trial(
+                    dict(c), float(hit["time_s"]), dict(hit.get("info", {})),
+                    wall_s=0.0, source="cache",
+                )
+                self.cache_hits += 1
+                self.trials.append(trial)
+                self._memo[k] = trial
+                self._log(trial, tag=tag, cached=True)
+            else:
+                plan.append((k, c))
+            first_served.add(k)
+
+        if plan:
+            parallel_ok = getattr(self.evaluator, "parallel_safe", True)
+            if self.clear_caches:
+                # trial isolation (paper: config rewrite + daemon restart) —
+                # clearing the jit cache is global state, so isolation forces
+                # the serial path with a clear before every fresh trial
+                import jax
+
+                fresh = []
+                for k, c in plan:
+                    jax.clear_caches()
+                    fresh.append((k, self._run_one(c)))
+            elif self.max_workers > 1 and parallel_ok and len(plan) > 1:
+                fresh = self._run_parallel(plan)
+            else:
+                fresh = [(k, self._run_one(c)) for k, c in plan]
+            for k, trial in fresh:
+                self.fresh_evaluations += 1
+                self.trials.append(trial)
+                self._memo[k] = trial
+                self._persist(trial)
+                self._log(trial, tag=tag, cached=False)
+
+        out: List[Trial] = []
+        for k in keys:
+            trial = self._memo[k]
+            out.append(trial)
+            if k in first_served:
+                first_served.discard(k)  # first occurrence logged above
+            else:  # repeat of this batch or of an earlier one — memo hit
+                self.memo_hits += 1
+                self._log(trial, tag=tag, cached=True)
+        return out
+
+    def run(
+        self,
+        strategy,
+        *,
+        batch_size: Optional[int] = None,
+        patience: Optional[int] = None,
+    ):
+        """Drive an ask/tell strategy to completion (or early stop).
+
+        ``patience=k`` prunes the sweep when the running best time has not
+        improved for k consecutive batches — the grid-pass killer."""
+        best = INFEASIBLE
+        stale = 0
+        stopped_early = False
+        while not strategy.done:
+            configs = strategy.ask(batch_size)
+            if not configs:
+                break
+            trials = self.evaluate_batch(configs, tag=strategy.tag)
+            strategy.tell(trials)
+            batch_best = min(
+                (t.time_s for t in trials if t.ok), default=INFEASIBLE
+            )
+            if batch_best < best:
+                best = batch_best
+                stale = 0
+            else:
+                stale += 1
+            if patience is not None and stale >= patience:
+                stopped_early = True
+                break
+        result = strategy.result()
+        if hasattr(result, "evaluations"):
+            result.evaluations = self.num_evaluations
+        if hasattr(result, "stopped_early"):
+            result.stopped_early = stopped_early
+        return result
+
+    def best(self) -> Trial:
+        ok = [t for t in self.trials if t.ok]
+        if not ok:
+            raise RuntimeError("no successful trials")
+        return min(ok, key=lambda t: t.time_s)
+
+    @property
+    def num_evaluations(self) -> int:
+        return len(self.trials)
+
+    def cache_stats(self) -> Dict[str, int]:
+        return {
+            "fresh": self.fresh_evaluations,
+            "memo_hits": self.memo_hits,
+            "cache_hits": self.cache_hits,
+        }
+
+    # ------------------------------------------------------------- execution
+
+    def _run_one(self, config: Dict[str, Any]) -> Trial:
+        """One fresh evaluation with retry + soft timeout + penalty."""
+        t0 = time.time()
+        last_err = None
+        for _attempt in range(self.retries + 1):
+            try:
+                t, info = self.evaluator(config)
+                trial = Trial(dict(config), float(t), info, wall_s=time.time() - t0)
+                if self.timeout_s is not None and trial.wall_s > self.timeout_s:
+                    return Trial(
+                        dict(config), self.infeasible_time, info,
+                        wall_s=trial.wall_s,
+                        error=f"TrialTimeout: wall {trial.wall_s:.1f}s > "
+                              f"{self.timeout_s}s (soft)",
+                    )
+                return trial
+            except Exception as e:  # noqa: BLE001 — a failed run is a trial
+                last_err = f"{type(e).__name__}: {e}"
+        return Trial(
+            dict(config), self.infeasible_time, {}, wall_s=time.time() - t0,
+            error=last_err,
+        )
+
+    def _run_parallel(
+        self, plan: List[Tuple[str, Dict[str, Any]]]
+    ) -> List[Tuple[str, Trial]]:
+        """Fan the batch over a thread pool; a future that misses the hard
+        deadline becomes an infeasible trial. The batch returns promptly
+        regardless: queued futures are cancelled and a hung worker thread is
+        abandoned, not joined (threads can't be killed — it still holds until
+        interpreter exit; process-level isolation is a ROADMAP item)."""
+        out: List[Tuple[str, Trial]] = []
+        pool = ThreadPoolExecutor(max_workers=self.max_workers)
+        try:
+            futures = [(k, c, pool.submit(self._run_one, c)) for k, c in plan]
+            for k, c, fut in futures:
+                try:
+                    trial = fut.result(timeout=self.timeout_s)
+                except FutureTimeoutError:
+                    fut.cancel()  # no-op if running; frees the slot if queued
+                    trial = Trial(
+                        dict(c), self.infeasible_time, {}, wall_s=self.timeout_s,
+                        error=f"TrialTimeout: no result within {self.timeout_s}s",
+                    )
+                except CancelledError:
+                    trial = Trial(
+                        dict(c), self.infeasible_time, {},
+                        wall_s=0.0,
+                        error="TrialTimeout: cancelled before start "
+                              f"(batch deadline {self.timeout_s}s)",
+                    )
+                out.append((k, trial))
+        finally:
+            # don't block on stragglers; drop whatever never started
+            pool.shutdown(wait=False, cancel_futures=True)
+        return out
+
+    # ------------------------------------------------------------------- io
+
+    def _persist(self, trial: Trial):
+        if not self.cache_path or not trial.ok:
+            return
+        rec = {
+            "key": config_hash(trial.config),
+            "platform": self.platform,
+            "ts": time.time(),
+            "config": trial.config,
+            "time_s": trial.time_s,
+            "info": _scalar_info(trial.info),
+        }
+        with self._log_lock:
+            self._persistent[rec["key"]] = rec
+            with self.cache_path.open("a") as f:
+                f.write(json.dumps(rec, default=str) + "\n")
+
+    def _log(self, trial: Trial, tag: str, cached: bool):
+        if not self.log_path:
+            return
+        rec = {
+            "ts": time.time(),
+            "platform": self.platform,
+            "tag": tag,
+            "cached": cached,
+            "config": trial.config,
+            "time_s": trial.time_s,
+            "wall_s": trial.wall_s,
+            "error": trial.error,
+            "source": trial.source,
+            "info": _scalar_info(trial.info),
+        }
+        with self._log_lock, self.log_path.open("a") as f:
+            f.write(json.dumps(rec, default=str) + "\n")
+
+
+def _scalar_info(info: Dict[str, Any]) -> Dict[str, Any]:
+    return {k: v for k, v in info.items() if isinstance(v, (int, float, str, bool))}
+
+
+def _load_cache(path: Path, platform: str) -> Dict[str, Dict[str, Any]]:
+    """Load a JSONL evaluation cache (last record per key wins). Records are
+    namespaced by platform so one shared file serves a multi-cell session."""
+    out: Dict[str, Dict[str, Any]] = {}
+    if not path.exists():
+        return out
+    for line in path.read_text().splitlines():
+        if not line.strip():
+            continue
+        try:
+            rec = json.loads(line)
+        except json.JSONDecodeError:
+            continue  # torn tail write from a crashed session
+        if rec.get("platform", platform) == platform and "key" in rec:
+            out[rec["key"]] = rec
+    return out
+
+
+def read_log(path: Path) -> List[Dict[str, Any]]:
+    """Recover trials from a scheduler log file (the paper's 'analyzing the
+    log file helps in finding the optimal configuration')."""
+    out = []
+    for line in Path(path).read_text().splitlines():
+        if line.strip():
+            out.append(json.loads(line))
+    return out
+
+
+def best_from_log(path: Path) -> Dict[str, Any]:
+    recs = [r for r in read_log(path) if r.get("error") is None]
+    return min(recs, key=lambda r: r["time_s"])

@@ -1,0 +1,41 @@
+"""Pluggable ask/tell search strategies for the tuning engine.
+
+``make_strategy(name, space, **kwargs)`` builds a registered strategy; the
+:class:`~repro.core.scheduler.TrialScheduler` drives it:
+
+    strategy = make_strategy("gsft", space, active_params=[...])
+    result = scheduler.run(strategy, batch_size=8, patience=3)
+
+Registered: ``gsft``/``grid`` (Algorithm I), ``crs`` (Algorithm II),
+``hillclimb`` (curated §Perf moves). New optimizers register with
+``@register_strategy("name")`` and implement ask/tell — no executor changes.
+"""
+from repro.core.strategies.base import (
+    STRATEGIES,
+    QueueStrategy,
+    Strategy,
+    make_strategy,
+    register_strategy,
+)
+from repro.core.strategies.crs import CRSResult, CRSStrategy
+from repro.core.strategies.gsft import GridFinerStrategy, GridResult
+from repro.core.strategies.hillclimb import (
+    CuratedHillclimbStrategy,
+    HillclimbResult,
+    Move,
+)
+
+__all__ = [
+    "CRSResult",
+    "CRSStrategy",
+    "CuratedHillclimbStrategy",
+    "GridFinerStrategy",
+    "GridResult",
+    "HillclimbResult",
+    "Move",
+    "QueueStrategy",
+    "STRATEGIES",
+    "Strategy",
+    "make_strategy",
+    "register_strategy",
+]

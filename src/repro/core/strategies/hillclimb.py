@@ -1,0 +1,90 @@
+"""Curated hillclimb — the §Perf sweep as an ask/tell strategy.
+
+The launch driver used to own this loop: a hand-written, hypothesis-tagged
+list of knob deltas per (arch × shape) cell, evaluated in order, recording
+hypothesis → change → measured outcome. As a Strategy it runs through the
+same TrialScheduler as GSFT/CRS, so the curated moves get batch parallelism,
+the persistent cache, and pruning for free — and a cell sweep composes with
+the multi-cell driver."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.scheduler import Trial, _scalar_info
+from repro.core.space import TunableSpace
+from repro.core.strategies.base import QueueStrategy, register_strategy
+
+
+@dataclass(frozen=True)
+class Move:
+    """One curated candidate: a named, hypothesis-tagged set of overrides."""
+
+    name: str
+    hypothesis: str
+    overrides: Dict[str, Any]
+
+
+@dataclass
+class HillclimbResult:
+    best_config: Dict[str, Any]
+    best_time: float
+    best_name: str
+    evaluations: int
+    records: List[Dict[str, Any]] = field(default_factory=list)
+    stopped_early: bool = False
+
+
+@register_strategy("hillclimb")
+class CuratedHillclimbStrategy(QueueStrategy):
+    def __init__(
+        self,
+        space: TunableSpace,
+        *,
+        moves: Sequence[Any],
+        fixed: Optional[Dict[str, Any]] = None,
+    ):
+        super().__init__()
+        self.tag = "hillclimb"
+        self.moves = [m if isinstance(m, Move) else Move(*m) for m in moves]
+        base = {**space.defaults(), **(fixed or {})}
+        self._queue_moves: List[Move] = list(self.moves)  # aligned with asks
+        self._pending = [{**base, **m.overrides} for m in self.moves]
+        self._told_moves: List[Move] = []
+        self.records: List[Dict[str, Any]] = []
+        self._best: Optional[Tuple[str, Dict[str, Any], float]] = None
+
+    def _observe(self, trial: Trial) -> None:
+        move = self._queue_moves[len(self._told_moves)]
+        self._told_moves.append(move)
+        rec: Dict[str, Any] = {
+            "name": move.name,
+            "hypothesis": move.hypothesis,
+            "overrides": dict(move.overrides),
+        }
+        if trial.ok:
+            rec.update(_scalar_info(trial.info))
+            # after the info spread: trial.time_s is authoritative (it carries
+            # the scheduler's penalties; info may echo a raw t_step_s)
+            rec["t_step_s"] = trial.time_s
+            rec["wall_s"] = round(trial.wall_s, 1)
+            # keys benchmarks.report indexes unconditionally (the roofline
+            # evaluator only emits hbm_penalized on overflow)
+            rec.setdefault("hbm_penalized", False)
+            if "roofline_fraction_mfu" in rec:
+                rec.setdefault("mfu", rec["roofline_fraction_mfu"])
+            if self._best is None or trial.time_s < self._best[2]:
+                self._best = (move.name, dict(trial.config), trial.time_s)
+        else:
+            rec["error"] = trial.error
+        self.records.append(rec)
+
+    def result(self) -> HillclimbResult:
+        name, config, t = self._best or ("", {}, float("inf"))
+        return HillclimbResult(
+            best_config=config,
+            best_time=t,
+            best_name=name,
+            evaluations=0,  # stamped by TrialScheduler.run
+            records=list(self.records),
+        )

@@ -1,16 +1,21 @@
 """Admin facade (paper Figure I): pick a platform and an algorithm, run the
 tuning, get the best configuration + the reduction vs. the all-defaults run.
+
+Every algorithm — gsft, crs, hillclimb, and whatever registers next — runs
+through the same ask/tell ``Strategy`` + ``TrialScheduler`` engine, so the
+engine knobs (``max_workers`` parallel batches, ``cache_path`` persistent
+evaluation cache, ``patience`` pruning, per-trial ``timeout_s``/``retries``)
+apply uniformly.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from pathlib import Path
 from typing import Any, Dict, Optional, Sequence
 
-from repro.core.cmpe import CMPE, Evaluator
-from repro.core.crs import controlled_random_search
-from repro.core.grid_finer import grid_search_finer_tuning
+from repro.core.scheduler import Evaluator, TrialScheduler
 from repro.core.space import SPACES, TunableSpace
+from repro.core.strategies import STRATEGIES, make_strategy
 
 
 @dataclass
@@ -22,6 +27,7 @@ class TuneOutcome:
     best_config: Dict[str, Any]
     evaluations: int
     detail: Any = None
+    cache_stats: Optional[Dict[str, int]] = None
 
     @property
     def reduction_pct(self) -> float:
@@ -32,7 +38,7 @@ class TuneOutcome:
         return 100.0 * (self.default_time - self.best_time) / self.default_time
 
     def summary(self) -> Dict[str, Any]:
-        return {
+        out = {
             "platform": self.platform,
             "algorithm": self.algorithm,
             "default_time_s": self.default_time,
@@ -41,6 +47,9 @@ class TuneOutcome:
             "evaluations": self.evaluations,
             "best_config": self.best_config,
         }
+        if self.cache_stats:
+            out["cache_stats"] = self.cache_stats
+        return out
 
 
 def tune(
@@ -53,30 +62,44 @@ def tune(
     fixed: Optional[Dict[str, Any]] = None,
     active_params: Optional[Sequence[str]] = None,
     clear_caches_between_trials: bool = False,
+    max_workers: int = 1,
+    cache_path: Optional[Path] = None,
+    batch_size: Optional[int] = None,
+    patience: Optional[int] = None,
+    timeout_s: Optional[float] = None,
+    retries: int = 0,
+    scheduler: Optional[TrialScheduler] = None,
     **algo_kwargs,
 ) -> TuneOutcome:
-    """Run one tuning session (the Admin's 'select algorithm × platform')."""
+    """Run one tuning session (the Admin's 'select algorithm × platform').
+
+    Pass ``scheduler`` to share one engine (and its memo + persistent cache)
+    across several sessions — the multi-cell driver does."""
     space = space or SPACES[platform]
-    cmpe = CMPE(
-        evaluator,
-        platform=platform,
-        log_path=log_path,
-        clear_caches_between_trials=clear_caches_between_trials,
-    )
+    if scheduler is None:
+        scheduler = TrialScheduler(
+            evaluator,
+            platform=platform,
+            log_path=log_path,
+            clear_caches_between_trials=clear_caches_between_trials,
+            max_workers=max_workers,
+            cache_path=cache_path,
+            timeout_s=timeout_s,
+            retries=retries,
+        )
 
     defaults = {**space.defaults(), **(fixed or {})}
-    default_time = cmpe.evaluate(defaults, tag="default")
+    default_time = scheduler.evaluate(defaults, tag="default")
 
-    if algorithm in ("gsft", "grid"):
-        result = grid_search_finer_tuning(
-            space, cmpe, fixed=fixed, active_params=active_params, **algo_kwargs
+    if algorithm not in STRATEGIES:
+        raise ValueError(
+            f"unknown algorithm {algorithm!r} (use one of {sorted(STRATEGIES)})"
         )
-        best_config, best_time = result.best_config, result.best_time
-    elif algorithm == "crs":
-        result = controlled_random_search(space, cmpe, fixed=fixed, **algo_kwargs)
-        best_config, best_time = result.best_config, result.best_time
-    else:
-        raise ValueError(f"unknown algorithm {algorithm!r} (use 'gsft' or 'crs')")
+    if algorithm in ("gsft", "grid"):
+        algo_kwargs.setdefault("active_params", active_params)
+    strategy = make_strategy(algorithm, space, fixed=fixed, **algo_kwargs)
+    result = scheduler.run(strategy, batch_size=batch_size, patience=patience)
+    best_config, best_time = result.best_config, result.best_time
 
     # defaults themselves might be the optimum; the log keeps everything
     if default_time < best_time:
@@ -88,6 +111,7 @@ def tune(
         default_time=default_time,
         best_time=best_time,
         best_config=best_config,
-        evaluations=cmpe.num_evaluations,
+        evaluations=scheduler.num_evaluations,
         detail=result,
+        cache_stats=scheduler.cache_stats(),
     )

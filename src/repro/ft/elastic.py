@@ -12,8 +12,8 @@ from dataclasses import dataclass
 from typing import Optional, Tuple
 
 import jax
-from jax.sharding import AxisType
 
+from repro.compat import mesh_kwargs
 from repro.configs.base import ArchConfig
 
 
@@ -59,7 +59,7 @@ def make_elastic_mesh(n_devices: int, **kw):
     return jax.sharding.Mesh(
         np.asarray(devices).reshape(data, model),
         ("data", "model"),
-        axis_types=(AxisType.Auto, AxisType.Auto),
+        **mesh_kwargs(2),
     )
 
 

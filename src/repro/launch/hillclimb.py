@@ -5,18 +5,20 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 knob changes for one (arch × shape) cell on the production mesh, recording
 hypothesis → change → before → after per iteration.
 
+The curated lists are now ``Move`` sequences fed to the shared
+``CuratedHillclimbStrategy`` + ``TrialScheduler`` engine (same path as
+GSFT/CRS), so a sweep gets the persistent evaluation cache and per-trial
+failure handling for free.
+
     PYTHONPATH=src python -m repro.launch.hillclimb --cell qwen2-72b:train_4k
 """
 import argparse
 import json
-import time
 from pathlib import Path
 
-import jax
-
-from repro.configs.base import SHAPES, RunConfig
+from repro.configs.base import SHAPES
 from repro.configs.archs import get_arch
-from repro.core import SPACES
+from repro.core import SPACES, CuratedHillclimbStrategy, TrialScheduler
 from repro.core.evaluators import RooflineEvaluator
 
 # (name, hypothesis, overrides) per cell — the napkin math lives in
@@ -53,42 +55,33 @@ CANDIDATES = {
 }
 
 
-def run_cell_sweep(cell: str, out_dir: Path):
+def run_cell_sweep(cell: str, out_dir: Path, *, cache_path: Path = None,
+                   scheduler: TrialScheduler = None):
     arch_name, shape_name = cell.split(":")
     arch = get_arch(arch_name)
     shape = SHAPES[shape_name]
     platform = "train" if shape.kind == "train" else "serve"
     space = SPACES[platform]
-    evaluator = RooflineEvaluator(arch, shape, space, chips=256, memory_penalty="soft")
 
-    results = []
-    defaults = space.defaults()
-    for name, hypothesis, overrides in CANDIDATES[cell]:
-        cfg = {**defaults, **overrides}
-        t0 = time.time()
-        try:
-            t, info = evaluator(cfg)
-            rec = {
-                "name": name, "hypothesis": hypothesis, "overrides": overrides,
-                "t_step_s": t,
-                "t_compute_s": info["t_compute_s"],
-                "t_memory_s": info["t_memory_s"],
-                "t_collective_s": info["t_collective_s"],
-                "bottleneck": info["bottleneck"],
-                "mfu": info["roofline_fraction_mfu"],
-                "hbm_est_gib": info["hbm_est_gib"],
-                "hbm_penalized": info.get("hbm_penalized", False),
-                "wall_s": round(time.time() - t0, 1),
-            }
-        except Exception as e:  # noqa: BLE001
-            rec = {"name": name, "hypothesis": hypothesis, "overrides": overrides,
-                   "error": f"{type(e).__name__}: {e}"}
-        results.append(rec)
-        base = results[0].get("t_step_s", float("nan"))
-        print(f"[{cell}] {name:16s} t_step={rec.get('t_step_s', float('nan')):8.3f}s "
+    if scheduler is None:
+        evaluator = RooflineEvaluator(
+            arch, shape, space, chips=256, memory_penalty="soft"
+        )
+        scheduler = TrialScheduler(
+            evaluator,
+            platform=platform,
+            cache_path=cache_path,
+            clear_caches_between_trials=True,
+        )
+    strategy = CuratedHillclimbStrategy(space, moves=CANDIDATES[cell])
+    res = scheduler.run(strategy)
+
+    results = res.records
+    base = results[0].get("t_step_s", float("nan")) if results else float("nan")
+    for rec in results:
+        print(f"[{cell}] {rec['name']:16s} t_step={rec.get('t_step_s', float('nan')):8.3f}s "
               f"({rec.get('bottleneck', 'ERR'):10s}) vs baseline {base:8.3f}s "
               f"hbm={rec.get('hbm_est_gib', 0):6.1f}GiB", flush=True)
-        jax.clear_caches()
 
     out_dir.mkdir(parents=True, exist_ok=True)
     (out_dir / f"{arch_name}__{shape_name}.json").write_text(
@@ -100,8 +93,10 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--cell", choices=list(CANDIDATES), required=True)
     ap.add_argument("--out", type=Path, default=Path("results/perf"))
+    ap.add_argument("--cache", type=Path, default=None,
+                    help="persistent JSONL evaluation cache")
     args = ap.parse_args()
-    run_cell_sweep(args.cell, args.out)
+    run_cell_sweep(args.cell, args.out, cache_path=args.cache)
     return 0
 
 

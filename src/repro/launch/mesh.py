@@ -3,7 +3,8 @@ this module never touches JAX device state."""
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -11,7 +12,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     (data × model); multi-pod adds a leading pod axis (2 × 16 × 16 = 512)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_tuning_mesh(model_parallel: int, *, chips: int = 256, multi_pod: bool = False):
@@ -21,13 +22,8 @@ def make_tuning_mesh(model_parallel: int, *, chips: int = 256, multi_pod: bool =
         raise ValueError(f"model_parallel {model_parallel} !| chips {chips}")
     data = chips // model_parallel
     if multi_pod:
-        return jax.make_mesh(
-            (2, data, model_parallel), ("pod", "data", "model"),
-            axis_types=(AxisType.Auto,) * 3,
-        )
-    return jax.make_mesh(
-        (data, model_parallel), ("data", "model"), axis_types=(AxisType.Auto,) * 2
-    )
+        return make_mesh((2, data, model_parallel), ("pod", "data", "model"))
+    return make_mesh((data, model_parallel), ("data", "model"))
 
 
 def make_host_mesh(model_parallel: int = 1, *, pod: int = 0):
@@ -36,11 +32,6 @@ def make_host_mesh(model_parallel: int = 1, *, pod: int = 0):
     n = len(jax.devices())
     if pod:
         data = n // (model_parallel * pod)
-        return jax.make_mesh(
-            (pod, data, model_parallel), ("pod", "data", "model"),
-            axis_types=(AxisType.Auto,) * 3,
-        )
+        return make_mesh((pod, data, model_parallel), ("pod", "data", "model"))
     data = n // model_parallel
-    return jax.make_mesh(
-        (data, model_parallel), ("data", "model"), axis_types=(AxisType.Auto,) * 2
-    )
+    return make_mesh((data, model_parallel), ("data", "model"))

@@ -1,0 +1,125 @@
+"""Multi-cell tuning driver: tune several (arch × shape) cells in ONE
+invocation, all sessions sharing one persistent evaluation cache.
+
+The paper's Admin tunes one platform at a time; a production fleet has a
+matrix of cells (model × context shape) to keep tuned. This driver walks the
+matrix, builds a RooflineEvaluator per cell, and runs the chosen strategy for
+each through TrialSchedulers that append to the same JSONL cache — so
+repeated configurations across cells and across invocations are free, and a
+re-run after a crash resumes where the cache left off.
+
+    PYTHONPATH=src python -m repro.launch.multicell \
+        --cells llama3.2-1b:train_4k llama3.2-1b:decode_32k \
+        --algorithm gsft --cache results/eval_cache.jsonl
+
+Emits one summary JSON per cell plus a fleet table on stdout.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.configs.archs import get_arch
+from repro.configs.base import SHAPES
+from repro.core import SPACES, tune
+from repro.core.evaluators import RooflineEvaluator
+
+
+def cell_platform(shape_name: str) -> str:
+    return "train" if SHAPES[shape_name].kind == "train" else "serve"
+
+
+def tune_cells(
+    cells,
+    *,
+    algorithm: str = "gsft",
+    chips: int = 256,
+    cache_path: Path = None,
+    log_dir: Path = None,
+    patience: int = None,
+    batch_size: int = None,
+    **algo_kwargs,
+):
+    """Tune each ``arch:shape`` cell; returns {cell: TuneOutcome}. One shared
+    ``cache_path`` makes the matrix incremental across sessions."""
+    outcomes = {}
+    for cell in cells:
+        arch_name, sep, shape_name = cell.partition(":")
+        if not sep or not shape_name:
+            raise SystemExit(
+                f"bad cell {cell!r}: expected ARCH:SHAPE, e.g. llama3.2-1b:train_4k"
+            )
+        if shape_name not in SHAPES:
+            raise SystemExit(
+                f"bad cell {cell!r}: unknown shape {shape_name!r} "
+                f"(known: {sorted(SHAPES)})"
+            )
+        arch = get_arch(arch_name)
+        shape = SHAPES[shape_name]
+        if shape.name in arch.skip_shapes:
+            print(f"[{cell}] SKIP (arch skips shape)")
+            continue
+        platform = cell_platform(shape_name)
+        space = SPACES[platform]
+        evaluator = RooflineEvaluator(arch, shape, space, chips=chips)
+        # platform key namespaces the shared cache per cell: same knob dict
+        # on a different cell must never collide
+        outcome = tune(
+            f"{platform}/{cell}",
+            algorithm,
+            evaluator,
+            space=space,
+            log_path=(log_dir / f"{arch_name}__{shape_name}.jsonl") if log_dir else None,
+            cache_path=cache_path,
+            patience=patience,
+            batch_size=batch_size,
+            clear_caches_between_trials=True,
+            **algo_kwargs,
+        )
+        outcomes[cell] = outcome
+        s = outcome.summary()
+        print(f"[{cell}] best={s['best_time_s']:.4f}s "
+              f"default={s['default_time_s']:.4f}s "
+              f"reduction={s['reduction_pct']:.1f}% "
+              f"evals={s['evaluations']} cache={s.get('cache_stats')}", flush=True)
+    return outcomes
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cells", nargs="+", required=True,
+                    metavar="ARCH:SHAPE", help="e.g. llama3.2-1b:train_4k")
+    ap.add_argument("--algorithm", default="gsft", choices=["gsft", "crs"])
+    ap.add_argument("--chips", type=int, default=256)
+    ap.add_argument("--samples", type=int, default=2)
+    ap.add_argument("--cache", type=Path, default=Path("results/eval_cache.jsonl"))
+    ap.add_argument("--log-dir", type=Path, default=Path("results/multicell"))
+    ap.add_argument("--out", type=Path, default=Path("results/multicell/summary.json"))
+    ap.add_argument("--patience", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=None)
+    args = ap.parse_args(argv)
+
+    algo_kwargs = {"samples_per_param": args.samples} if args.algorithm == "gsft" else {}
+    outcomes = tune_cells(
+        args.cells,
+        algorithm=args.algorithm,
+        chips=args.chips,
+        cache_path=args.cache,
+        log_dir=args.log_dir,
+        patience=args.patience,
+        batch_size=args.batch,
+        **algo_kwargs,
+    )
+    args.out.parent.mkdir(parents=True, exist_ok=True)
+    args.out.write_text(json.dumps(
+        {cell: o.summary() for cell, o in outcomes.items()}, indent=1, default=str
+    ))
+    print(f"summary -> {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

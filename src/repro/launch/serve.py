@@ -17,6 +17,8 @@ import time
 from pathlib import Path
 
 import jax
+
+from repro.compat import set_mesh as compat_set_mesh
 import jax.numpy as jnp
 
 from repro.configs.base import RunConfig, ShapeConfig
@@ -47,7 +49,7 @@ def main(argv=None):
         run = SERVE_SPACE.to_run_config(json.loads(args.tuned_config.read_text()), run)
     mesh = make_host_mesh(model_parallel=args.model_parallel)
 
-    with jax.set_mesh(mesh):
+    with compat_set_mesh(mesh):
         pre = make_prefill_step(arch, run, prefill_shape, mesh)
         dec = make_decode_step(arch, run, decode_shape, mesh)
         model = pre.model

@@ -17,6 +17,8 @@ from pathlib import Path
 
 import jax
 
+from repro.compat import set_mesh as compat_set_mesh
+
 from repro.configs.base import SHAPES, RunConfig, ShapeConfig
 from repro.configs.archs import ARCH_NAMES, get_arch
 from repro.checkpoint.manager import CheckpointManager
@@ -50,7 +52,7 @@ def main(argv=None):
         run = TRAIN_SPACE.to_run_config(knobs, run)
     mesh = make_host_mesh(model_parallel=args.model_parallel)
 
-    with jax.set_mesh(mesh):
+    with compat_set_mesh(mesh):
         bundle = make_train_step(arch, run, shape, mesh)
         state = init_train_state(bundle)
         (state,) = bundle.place(mesh, state)

@@ -1,4 +1,5 @@
-"""Tuning driver — the paper's Admin box: pick platform × algorithm, run it.
+"""Tuning driver — the paper's Admin box: pick platform × algorithm, run it
+through the ask/tell Strategy + TrialScheduler engine.
 
 Roofline evaluator (production mesh, AOT — needs the 512 fake devices, so run
 it the same way as the dry-run):
@@ -7,10 +8,12 @@ it the same way as the dry-run):
         --algorithm gsft --arch qwen2-72b --shape train_4k --evaluator roofline
 
 Walltime evaluator on the paper's WordCount job (CPU-measured, the faithful
-reproduction):
+reproduction), four trials at a time with a persistent evaluation cache:
 
     PYTHONPATH=src python -m repro.launch.tune --platform wordcount \
-        --algorithm crs
+        --algorithm crs --jobs 4 --cache results/eval_cache.jsonl
+
+A warm-cache re-run of the same command performs zero fresh evaluations.
 """
 import os
 
@@ -25,6 +28,33 @@ from repro.configs.base import SHAPES
 from repro.configs.archs import ARCH_NAMES, get_arch
 from repro.core import SPACES, tune
 from repro.core.evaluators import RooflineEvaluator
+
+
+def add_engine_args(ap: argparse.ArgumentParser):
+    """Engine knobs shared by every driver that runs the TrialScheduler."""
+    ap.add_argument("--jobs", type=int, default=1,
+                    help="parallel trials per batch (thread pool)")
+    ap.add_argument("--batch", type=int, default=None,
+                    help="max configs per ask() batch (default: whole phase)")
+    ap.add_argument("--cache", type=Path, default=None,
+                    help="persistent JSONL evaluation cache shared across runs")
+    ap.add_argument("--patience", type=int, default=None,
+                    help="stop when best hasn't improved in N batches")
+    ap.add_argument("--trial-timeout", type=float, default=None,
+                    help="per-trial timeout in seconds (timeout => infeasible)")
+    ap.add_argument("--retries", type=int, default=0,
+                    help="per-trial retries before recording a failure")
+
+
+def engine_kwargs(args) -> dict:
+    return dict(
+        max_workers=args.jobs,
+        batch_size=args.batch,
+        cache_path=args.cache,
+        patience=args.patience,
+        timeout_s=args.trial_timeout,
+        retries=args.retries,
+    )
 
 
 def main(argv=None):
@@ -42,6 +72,7 @@ def main(argv=None):
     ap.add_argument("--rounds", type=int, default=4)
     ap.add_argument("--log", type=Path, default=Path("results/tune_log.jsonl"))
     ap.add_argument("--out", type=Path, default=None, help="write best config JSON")
+    add_engine_args(ap)
     args = ap.parse_args(argv)
 
     if args.platform == "wordcount":
@@ -70,6 +101,7 @@ def main(argv=None):
         evaluator,
         space=space,
         log_path=args.log,
+        **engine_kwargs(args),
         **kwargs,
     )
     print(json.dumps(outcome.summary(), indent=1, default=str))

@@ -1,0 +1,39 @@
+"""Optional-hypothesis shim: property tests degrade to a clean skip when
+hypothesis is not installed (install the ``dev`` extra: ``pip install -e
+.[dev]``) instead of erroring the whole module at collection."""
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            # plain zero-arg stand-in: no functools.wraps, or pytest would
+            # read the wrapped signature and demand fixtures for its params
+            def skipper():
+                pytest.skip("hypothesis not installed — pip install -e .[dev]")
+
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _AnyStrategy:
+        """Stands in for ``hypothesis.strategies``: every strategy call
+        returns an inert placeholder (the test body never runs)."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

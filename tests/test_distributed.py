@@ -14,11 +14,12 @@ import jax, jax.numpy as jnp
 from repro.configs.base import ShapeConfig, RunConfig
 from repro.configs.archs import get_arch
 from repro.distributed.steps import make_step, init_train_state
+from repro.compat import set_mesh
 from repro.launch.mesh import make_host_mesh
 mesh = make_host_mesh(model_parallel=2, pod=2)
 arch = get_arch("llama3.2-1b", smoke=True)
 shape = ShapeConfig("t", 32, 8, "train")
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     b = make_step(arch, RunConfig(mesh_model_parallel=2), shape, mesh)
     state = init_train_state(b)
     batch = b.model.make_inputs(shape)
@@ -40,13 +41,14 @@ import jax, jax.numpy as jnp
 from repro.configs.base import ShapeConfig, RunConfig
 from repro.configs.archs import get_arch
 from repro.distributed.steps import make_step, init_train_state
+from repro.compat import set_mesh
 from repro.launch.mesh import make_host_mesh
 mesh = make_host_mesh(model_parallel=2, pod=2)
 arch = get_arch("llama3.2-1b", smoke=True)
 shape = ShapeConfig("t", 32, 8, "train")
 losses = {}
 for comp in ["off", "int8"]:
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         b = make_step(arch, RunConfig(mesh_model_parallel=2, grad_compression=comp), shape, mesh)
         state = init_train_state(b, jax.random.PRNGKey(0))
         batch = b.model.make_inputs(shape, jax.random.PRNGKey(1))
@@ -74,12 +76,13 @@ import jax, jax.numpy as jnp
 from repro.configs.base import ShapeConfig, RunConfig
 from repro.configs.archs import get_arch
 from repro.distributed.steps import make_prefill_step, make_decode_step
+from repro.compat import set_mesh
 from repro.launch.mesh import make_host_mesh
 mesh = make_host_mesh(model_parallel=4)
 for name in ["gemma3-1b", "whisper-tiny"]:
     arch = get_arch(name, smoke=True)
     run = RunConfig(mesh_model_parallel=4)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         pre = make_prefill_step(arch, run, ShapeConfig("p", 32, 4, "prefill"), mesh)
         params = pre.model.init_params(jax.random.PRNGKey(0))
         batch = pre.model.make_inputs(ShapeConfig("p", 32, 4, "prefill"))

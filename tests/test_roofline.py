@@ -1,8 +1,7 @@
 """Roofline machinery: HLO collective parser (property-based), wire-byte
 model, cost extrapolation algebra, TPU memory estimator."""
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st
 
 from repro.core.hlo import CollectiveStats, parse_collectives
 from repro.core.roofline import (CostTerms, PEAK_FLOPS, Roofline, collective_time,

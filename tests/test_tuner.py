@@ -5,8 +5,7 @@ import math
 from pathlib import Path
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st
 
 from repro.core import (CMPE, SPACES, best_from_log, controlled_random_search,
                         grid_search_finer_tuning, read_log, tune)

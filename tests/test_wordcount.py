@@ -2,8 +2,7 @@
 (property-based) and the measured knob effects the reproduction relies on."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st
 
 from repro.apps.wordcount import (WORDCOUNT_SPACE, build_wordcount, make_corpus,
                                   wordcount_reference)

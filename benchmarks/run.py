@@ -36,6 +36,10 @@ def main(argv=None):
     ap.add_argument("--cache", type=Path, default=None,
                     help="persistent JSONL evaluation cache — a warm re-run "
                          "of the search tables performs no fresh evaluations")
+    ap.add_argument("--strategy", default="all",
+                    choices=["all", "gsft", "crs", "tpe"],
+                    help="which search strategy's tables to run (default all, "
+                         "incl. the GSFT-vs-CRS-vs-TPE shootout)")
     args = ap.parse_args(argv)
     tables.ENGINE.update(max_workers=args.jobs, cache_path=args.cache)
 
@@ -49,6 +53,7 @@ def main(argv=None):
         rows = tables.table_defaults(platform)
         emit(rows); all_rows += rows
 
+    want = lambda s: args.strategy in ("all", s)
     if not args.quick:
         for platform in platforms:
             print(f"\n## Table {'IV' if platform == 'wordcount' else 'VII'} — "
@@ -61,19 +66,33 @@ def main(argv=None):
             rows = tables.table_all_opt(platform)
             emit(rows); all_rows += rows
 
-            print(f"\n## Table {'IX' if platform == 'wordcount' else 'X'} — "
-                  f"{platform}: Grid Search with Finer Tuning")
-            rows = tables.table_gsft(platform)
+            if want("gsft"):
+                print(f"\n## Table {'IX' if platform == 'wordcount' else 'X'} — "
+                      f"{platform}: Grid Search with Finer Tuning")
+                rows = tables.table_gsft(platform)
+                emit(rows); all_rows += rows
+
+            if want("crs"):
+                print(f"\n## Table {'XI' if platform == 'wordcount' else 'XII'} — "
+                      f"{platform}: Controlled Random Search")
+                rows = tables.table_crs(platform)
+                emit(rows); all_rows += rows
+
+            if want("tpe"):
+                print(f"\n## §TPE — {platform}: Tree-structured Parzen "
+                      f"Estimator (full knob set, GSFT-comparable budget)")
+                rows = tables.table_tpe(platform)
+                emit(rows); all_rows += rows
+
+        if args.strategy == "all":
+            print("\n## §XI comparison — reduction in execution time")
+            rows = tables.table_comparison()
             emit(rows); all_rows += rows
 
-            print(f"\n## Table {'XI' if platform == 'wordcount' else 'XII'} — "
-                  f"{platform}: Controlled Random Search")
-            rows = tables.table_crs(platform)
+            print("\n## §Strategy shootout — GSFT vs CRS vs TPE on WordCount "
+                  "(equal trial budgets)")
+            rows = tables.table_strategy_shootout("wordcount")
             emit(rows); all_rows += rows
-
-        print("\n## §XI comparison — reduction in execution time")
-        rows = tables.table_comparison()
-        emit(rows); all_rows += rows
 
     print("\n## §Roofline — per (arch × shape) on the 16×16 production mesh "
           "(from the dry-run artifacts)")

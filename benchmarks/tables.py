@@ -107,7 +107,7 @@ def table_all_opt(platform: str) -> List[Dict[str, Any]]:
 def table_gsft(platform: str) -> List[Dict[str, Any]]:
     ev, space = _eval_for(platform)
     out: TuneOutcome = tune(
-        platform if platform in ("train", "serve") else "train", "gsft", ev,
+        platform, "gsft", ev,  # real platform name namespaces the cache
         space=space, active_params=_actives(platform), samples_per_param=3,
         log_path=RESULTS / f"gsft_{platform}.jsonl", **_scheduler_opts(),
     )
@@ -126,7 +126,7 @@ def table_gsft(platform: str) -> List[Dict[str, Any]]:
 def table_crs(platform: str) -> List[Dict[str, Any]]:
     ev, space = _eval_for(platform)
     out = tune(
-        platform if platform in ("train", "serve") else "train", "crs", ev,
+        platform, "crs", ev,
         space=space, m=10, k=3, max_rounds=4, seed=0,
         log_path=RESULTS / f"crs_{platform}.jsonl", **_scheduler_opts(),
     )
@@ -137,6 +137,75 @@ def table_crs(platform: str) -> List[Dict[str, Any]]:
              "tuned_time_s": round(out.best_time, 4),
              "reduction_pct": round(out.reduction_pct, 2),
              "evaluations": out.evaluations}]
+
+
+# ---------------------------------------------------------- TPE (model-based)
+
+
+def table_tpe(platform: str, budget: int = 36) -> List[Dict[str, Any]]:
+    """TPE over the full knob set at a GSFT-comparable trial budget.
+
+    ``history=[]`` so that with a shared ``--cache`` the other tables'
+    records can't leak into this table's incumbent — the row must report
+    what TPE itself found with its own budget."""
+    ev, space = _eval_for(platform)
+    out = tune(
+        platform, "tpe", ev,
+        space=space, max_trials=budget, round_size=8, seed=0, history=[],
+        log_path=RESULTS / f"tpe_{platform}.jsonl", **_scheduler_opts(),
+    )
+    (RESULTS / f"tpe_{platform}.json").write_text(json.dumps(out.summary(), indent=1, default=str))
+    return [{"table": "tpe",
+             "platform": platform, "algorithm": "tpe",
+             "default_time_s": round(out.default_time, 4),
+             "tuned_time_s": round(out.best_time, 4),
+             "reduction_pct": round(out.reduction_pct, 2),
+             "evaluations": out.evaluations}]
+
+
+# --------------------------------- GSFT vs CRS vs TPE shootout (equal budget)
+
+
+def table_strategy_shootout(platform: str = "wordcount", seed: int = 0) -> List[Dict[str, Any]]:
+    """The three strategies head-to-head on one platform. GSFT's grid sets
+    the trial budget; CRS and TPE get the same number of trials (CRS may stop
+    early on its variation rule — the evaluations column keeps it honest). TPE
+    runs with an empty warm-start history so every strategy pays full price.
+    Writes ``results/benchmarks/strategy_comparison.json``."""
+    ev, space = _eval_for(platform)
+    opts = _scheduler_opts()
+
+    gsft = tune(platform, "gsft", ev, space=space, active_params=_actives(platform),
+                samples_per_param=3,
+                log_path=RESULTS / f"shootout_gsft_{platform}.jsonl", **opts)
+    budget = gsft.evaluations
+    crs = tune(platform, "crs", ev, space=space,
+               m=max(4, budget // 4), k=3, max_rounds=4, seed=seed,
+               log_path=RESULTS / f"shootout_crs_{platform}.jsonl", **opts)
+    # budget - 1 proposals: tune() spends one trial on the defaults config,
+    # which gsft.evaluations already counts — totals come out equal
+    tpe = tune(platform, "tpe", ev, space=space, max_trials=budget - 1,
+               round_size=8, seed=seed, history=[],
+               log_path=RESULTS / f"shootout_tpe_{platform}.jsonl", **opts)
+
+    best_baseline = min(gsft.best_time, crs.best_time)
+    rows = []
+    for name, out in (("gsft", gsft), ("crs", crs), ("tpe", tpe)):
+        rows.append({
+            "table": "shootout", "platform": platform, "strategy": name,
+            "budget": budget, "evaluations": out.evaluations,
+            "default_time_s": round(out.default_time, 4),
+            "best_time_s": round(out.best_time, 4),
+            "reduction_pct": round(out.reduction_pct, 2),
+        })
+    rows[-1]["matches_or_beats_baselines"] = tpe.best_time <= best_baseline
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / "strategy_comparison.json").write_text(json.dumps({
+        "platform": platform, "budget": budget, "rows": rows,
+        "best_configs": {"gsft": gsft.best_config, "crs": crs.best_config,
+                         "tpe": tpe.best_config},
+    }, indent=1, default=str))
+    return rows
 
 
 # --------------------------------------------------- §XI comparison table

@@ -1,5 +1,6 @@
-"""The paper, end-to-end: auto-tune WordCount's 12 parameters with BOTH
-algorithms and measured wall-clock time, then compare (paper §X/§XI).
+"""The paper, end-to-end: auto-tune WordCount's 12 parameters with the
+paper's two algorithms plus the model-based TPE strategy, all on measured
+wall-clock time, then compare (paper §X/§XI).
 
     PYTHONPATH=src python examples/tune_wordcount.py
 """
@@ -18,12 +19,16 @@ def main():
                 samples_per_param=3)
     crs = tune("train", "crs", evaluator, space=WORDCOUNT_SPACE, log_path=log,
                m=10, k=3, max_rounds=4, seed=0)
+    tpe = tune("train", "tpe", evaluator, space=WORDCOUNT_SPACE, log_path=log,
+               max_trials=40, seed=0)
 
     print(f"default execution time : {gsft.default_time*1e3:8.1f} ms")
     print(f"GSFT  best             : {gsft.best_time*1e3:8.1f} ms "
           f"(-{gsft.reduction_pct:.1f}%, {gsft.evaluations} trials)")
     print(f"CRS   best             : {crs.best_time*1e3:8.1f} ms "
           f"(-{crs.reduction_pct:.1f}%, {crs.evaluations} trials)")
+    print(f"TPE   best             : {tpe.best_time*1e3:8.1f} ms "
+          f"(-{tpe.reduction_pct:.1f}%, {tpe.evaluations} trials)")
     print("\nGSFT best config (non-defaults):")
     for k, v in gsft.best_config.items():
         if v != WORDCOUNT_SPACE.param(k).default:

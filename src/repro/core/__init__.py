@@ -4,7 +4,7 @@
   - ``scheduler``  — TrialScheduler: batched/cached/pruned trial execution
                      (grown from the paper's CMPE, §VII)
   - ``cmpe``       — back-compat serial CMPE facade over the scheduler
-  - ``strategies`` — ask/tell Strategy engine: gsft, crs, hillclimb
+  - ``strategies`` — ask/tell Strategy engine: gsft, crs, hillclimb, tpe
   - ``grid_finer`` — Algorithm I wrapper: Grid Search with Finer Tuning (§VIII)
   - ``crs``        — Algorithm II wrapper: Controlled Random Search (§IX)
   - ``tuner``      — the Admin facade (Figure I)
@@ -24,6 +24,8 @@ from repro.core.strategies import (
     HillclimbResult,
     Move,
     Strategy,
+    TPEResult,
+    TPEStrategy,
     make_strategy,
     register_strategy,
 )
@@ -41,6 +43,8 @@ __all__ = [
     "SERVE_SPACE",
     "SPACES",
     "Strategy",
+    "TPEResult",
+    "TPEStrategy",
     "TRAIN_SPACE",
     "Trial",
     "TrialScheduler",

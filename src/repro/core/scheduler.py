@@ -50,10 +50,15 @@ class Trial:
     wall_s: float = 0.0
     error: Optional[str] = None
     source: str = "fresh"  # fresh | cache (persistent) — memo hits reuse the Trial
+    status: str = "ok"  # ok | error | timeout — timeouts are NOT generic failures
 
     @property
     def ok(self) -> bool:
         return self.error is None
+
+    @property
+    def timed_out(self) -> bool:
+        return self.status == "timeout"
 
 
 def config_key(config: Dict[str, Any]) -> str:
@@ -101,10 +106,15 @@ class TrialScheduler:
         self.trials: List[Trial] = []
         self._memo: Dict[str, Trial] = {}
         self._log_lock = threading.Lock()
+        self._batch_tag = ""  # provenance stamped into persisted records
         # cache-accounting counters (the engine tests assert on these)
         self.fresh_evaluations = 0
         self.memo_hits = 0
         self.cache_hits = 0
+        # outcome counters — timeouts (incl. abandoned hung threads) are
+        # reported distinctly, not folded into the generic failure count
+        self.timeout_trials = 0
+        self.error_trials = 0
         if self.log_path:
             self.log_path.parent.mkdir(parents=True, exist_ok=True)
         self.cache_path = Path(cache_path) if cache_path else None
@@ -126,6 +136,7 @@ class TrialScheduler:
         """Evaluate a batch, returning one Trial per config **in input
         order**. Duplicates (within the batch or vs. earlier batches) are
         served from the memo; persistent-cache hits cost nothing fresh."""
+        self._batch_tag = tag
         keys = [config_key(c) for c in configs]
         plan: List[Tuple[str, Dict[str, Any]]] = []  # unique keys needing a run
         first_served = set()  # keys whose first occurrence is logged below
@@ -164,9 +175,14 @@ class TrialScheduler:
                 fresh = [(k, self._run_one(c)) for k, c in plan]
             for k, trial in fresh:
                 self.fresh_evaluations += 1
+                if trial.timed_out:
+                    self.timeout_trials += 1
+                elif not trial.ok:
+                    self.error_trials += 1
                 self.trials.append(trial)
                 self._memo[k] = trial
-                self._persist(trial)
+                # successful trials were already persisted the moment they
+                # completed (inside _run_one) — a mid-batch crash loses nothing
                 self._log(trial, tag=tag, cached=False)
 
         out: List[Trial] = []
@@ -216,6 +232,8 @@ class TrialScheduler:
             result.evaluations = self.num_evaluations
         if hasattr(result, "stopped_early"):
             result.stopped_early = stopped_early
+        if hasattr(result, "timeouts"):
+            result.timeouts = self.timeout_trials
         return result
 
     def best(self) -> Trial:
@@ -235,10 +253,33 @@ class TrialScheduler:
             "cache_hits": self.cache_hits,
         }
 
+    def run_stats(self) -> Dict[str, int]:
+        """Cache accounting plus trial outcomes — the run-summary block."""
+        return {
+            **self.cache_stats(),
+            "trials": self.num_evaluations,
+            "timeouts": self.timeout_trials,
+            "errors": self.error_trials,
+        }
+
+    def cached_observations(self) -> List[Tuple[Dict[str, Any], float, Any]]:
+        """``(config, time_s, tag)`` triples from the persistent cache, this
+        platform only, in file order — the warm-start history a model-based
+        strategy (TPE) seeds its observation set from on resume. The tag
+        carries provenance: a strategy charges only its *own* records against
+        its trial budget and treats the rest as free model observations."""
+        return [
+            (dict(rec["config"]), float(rec["time_s"]), rec.get("tag"))
+            for rec in self._persistent.values()
+            if "config" in rec and "time_s" in rec
+        ]
+
     # ------------------------------------------------------------- execution
 
     def _run_one(self, config: Dict[str, Any]) -> Trial:
-        """One fresh evaluation with retry + soft timeout + penalty."""
+        """One fresh evaluation with retry + soft timeout + penalty. The
+        result is persisted immediately (not at batch end), so a session
+        killed mid-batch resumes from everything already evaluated."""
         t0 = time.time()
         last_err = None
         for _attempt in range(self.retries + 1):
@@ -251,13 +292,15 @@ class TrialScheduler:
                         wall_s=trial.wall_s,
                         error=f"TrialTimeout: wall {trial.wall_s:.1f}s > "
                               f"{self.timeout_s}s (soft)",
+                        status="timeout",
                     )
+                self._persist(trial)
                 return trial
             except Exception as e:  # noqa: BLE001 — a failed run is a trial
                 last_err = f"{type(e).__name__}: {e}"
         return Trial(
             dict(config), self.infeasible_time, {}, wall_s=time.time() - t0,
-            error=last_err,
+            error=last_err, status="error",
         )
 
     def _run_parallel(
@@ -279,7 +322,9 @@ class TrialScheduler:
                     fut.cancel()  # no-op if running; frees the slot if queued
                     trial = Trial(
                         dict(c), self.infeasible_time, {}, wall_s=self.timeout_s,
-                        error=f"TrialTimeout: no result within {self.timeout_s}s",
+                        error=f"TrialTimeout: no result within {self.timeout_s}s "
+                              "(worker thread abandoned)",
+                        status="timeout",
                     )
                 except CancelledError:
                     trial = Trial(
@@ -287,6 +332,7 @@ class TrialScheduler:
                         wall_s=0.0,
                         error="TrialTimeout: cancelled before start "
                               f"(batch deadline {self.timeout_s}s)",
+                        status="timeout",
                     )
                 out.append((k, trial))
         finally:
@@ -302,6 +348,7 @@ class TrialScheduler:
         rec = {
             "key": config_hash(trial.config),
             "platform": self.platform,
+            "tag": self._batch_tag,  # which strategy/phase proposed this
             "ts": time.time(),
             "config": trial.config,
             "time_s": trial.time_s,
@@ -324,6 +371,7 @@ class TrialScheduler:
             "time_s": trial.time_s,
             "wall_s": trial.wall_s,
             "error": trial.error,
+            "status": trial.status,
             "source": trial.source,
             "info": _scalar_info(trial.info),
         }

@@ -7,7 +7,8 @@
     result = scheduler.run(strategy, batch_size=8, patience=3)
 
 Registered: ``gsft``/``grid`` (Algorithm I), ``crs`` (Algorithm II),
-``hillclimb`` (curated §Perf moves). New optimizers register with
+``hillclimb`` (curated §Perf moves), ``tpe``/``bayes`` (Tree-structured
+Parzen Estimator with batched acquisition). New optimizers register with
 ``@register_strategy("name")`` and implement ask/tell — no executor changes.
 """
 from repro.core.strategies.base import (
@@ -24,6 +25,7 @@ from repro.core.strategies.hillclimb import (
     HillclimbResult,
     Move,
 )
+from repro.core.strategies.tpe import TPEResult, TPEStrategy
 
 __all__ = [
     "CRSResult",
@@ -36,6 +38,8 @@ __all__ = [
     "QueueStrategy",
     "STRATEGIES",
     "Strategy",
+    "TPEResult",
+    "TPEStrategy",
     "make_strategy",
     "register_strategy",
 ]

@@ -1,0 +1,337 @@
+"""Tree-structured Parzen Estimator — the model-based strategy the ask/tell
+engine was built to host (ROADMAP "Next optimizer").
+
+TPE (Bergstra et al., 2011) inverts the usual surrogate direction: instead of
+modelling p(objective | config) it splits the observations at an objective
+quantile ``gamma`` into a *good* set and a *bad* set and fits one kernel
+density per parameter to each — ``l(x)`` over the good configs, ``g(x)`` over
+the bad. Maximizing expected improvement reduces to maximizing ``l(x)/g(x)``:
+candidates are drawn from ``l`` and ranked by the density ratio.
+
+Per-``Param`` kernels respect the space semantics:
+
+  - ``IntParam``/``FloatParam`` — a Parzen mixture of Gaussians centred on
+    the observed values plus one uniform prior component; samples are pushed
+    through ``Param.snap`` so ``step`` grids and ``pow2`` snapping always
+    hold. ``pow2`` params with positive bounds are modelled in log2 space
+    (the natural metric for mesh factors and block sizes).
+  - ``CatParam`` — a Laplace-smoothed categorical over ``choices``.
+
+**Batched acquisition.** Proposals are generated a *round* at a time, every
+round drawn before any of its results is consumed — exactly the CRS
+discipline — so ``TrialScheduler.run(batch_size=n)`` keeps its thread pool
+full and the proposed-config *set* is identical for any batch size (the
+determinism tests assert this). Within a round, each proposal after the first
+is conditioned on a **constant-liar penalty**: the already-proposed (in-
+flight) configs are told a pessimistic lie (the worst observed objective), so
+they join the *bad* density and the ratio ``l/g`` repels the next candidate
+away from them — diversity without waiting for results.
+
+**Warm start.** ``history`` (the tuner feeds it from the TrialScheduler's
+persistent JSONL cache as ``(config, time_s, tag)`` triples) seeds the
+observation set; entries the strategy itself proposed — tpe-tagged cache
+records, and untagged/explicit ``(config, time_s)`` pairs — also count
+toward ``max_trials``. So a re-run over a complete cache proposes nothing
+(zero fresh evaluations), a re-run over a crashed session's cache resumes
+with exactly the unpaid remainder of its budget, and records another
+strategy left on the platform (a GSFT sweep sharing the same ``--cache``)
+are free model evidence rather than silent budget theft.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.scheduler import Trial, config_key
+from repro.core.space import CatParam, Param, TunableSpace
+from repro.core.strategies.base import QueueStrategy, register_strategy
+
+_SQRT_2PI = math.sqrt(2.0 * math.pi)
+
+
+@dataclass
+class TPEResult:
+    best_config: Dict[str, Any]
+    best_time: float
+    rounds: int
+    evaluations: int
+    n_observations: int = 0
+    warm_started: int = 0  # observations seeded from the persistent cache
+    timeouts: int = 0
+    stopped_early: bool = False
+
+
+# ------------------------------------------------------------- kernel densities
+
+
+class _NumericDensity:
+    """Parzen estimator for an Int/Float param: a mixture of Gaussians at the
+    observed values plus one uniform prior component over the bounds. ``pow2``
+    params with lo >= 1 live in log2 space."""
+
+    def __init__(self, param: Param, values: Sequence[Any], prior_weight: float = 1.0):
+        self.param = param
+        self.log2 = bool(getattr(param, "pow2", False)) and param.lo >= 1
+        lo, hi = float(param.lo), float(param.hi)
+        if self.log2:
+            lo, hi = math.log2(lo), math.log2(max(hi, lo * 2.0))
+        self.lo, self.hi = lo, hi
+        self.width = max(hi - lo, 1e-9)
+        self.points = [self._fwd(v) for v in values]
+        # bandwidth shrinks as evidence accumulates, floored so late rounds
+        # still explore the step/pow2 neighbourhood
+        self.sigma = max(self.width / max(len(self.points), 1), self.width * 0.08)
+        self.prior_weight = prior_weight
+        self.total = len(self.points) + prior_weight
+
+    def _fwd(self, v) -> float:
+        v = float(v)
+        return math.log2(max(v, 2.0 ** self.lo)) if self.log2 else v
+
+    def sample(self, rng):
+        r = rng.random() * self.total
+        if r < self.prior_weight or not self.points:
+            x = self.lo + rng.random() * self.width
+        else:
+            mu = self.points[int(rng.random() * len(self.points)) % len(self.points)]
+            x = rng.gauss(mu, self.sigma)
+        return self.param.snap(2.0 ** x if self.log2 else x)
+
+    def logpdf(self, v) -> float:
+        x = self._fwd(v)
+        dens = self.prior_weight / self.width
+        for mu in self.points:
+            z = (x - mu) / self.sigma
+            dens += math.exp(-0.5 * z * z) / (self.sigma * _SQRT_2PI)
+        return math.log(dens / self.total)
+
+
+class _CategoricalDensity:
+    """Laplace-smoothed categorical over a CatParam's choices."""
+
+    def __init__(self, param: CatParam, values: Sequence[Any], prior_weight: float = 1.0):
+        self.param = param
+        counts = {c: prior_weight for c in param.choices}
+        for v in values:
+            counts[param.snap(v)] += 1.0
+        total = sum(counts.values())
+        self.choices = list(param.choices)
+        self.probs = [counts[c] / total for c in self.choices]
+
+    def sample(self, rng):
+        r = rng.random()
+        acc = 0.0
+        for c, p in zip(self.choices, self.probs):
+            acc += p
+            if r < acc:
+                return c
+        return self.choices[-1]
+
+    def logpdf(self, v) -> float:
+        v = self.param.snap(v)
+        return math.log(self.probs[self.choices.index(v)])
+
+
+def _density(param: Param, values: Sequence[Any], prior_weight: float):
+    if param.numeric:
+        return _NumericDensity(param, values, prior_weight)
+    return _CategoricalDensity(param, values, prior_weight)
+
+
+# ------------------------------------------------------------------- strategy
+
+
+@register_strategy("tpe", "bayes")
+class TPEStrategy(QueueStrategy):
+    """Tree-structured Parzen Estimator with round-batched EI acquisition.
+
+    Parameters
+      max_trials     trial budget; own warm-start history counts toward it
+      n_startup      random trials before the first model round
+      gamma          good/bad split quantile (fraction of obs in the good set)
+      n_candidates   EI candidates sampled from ``l`` per proposal
+      round_size     proposals per model round (size the thread pool to this)
+      history        prior ``(config, time_s[, tag])`` observations — own
+                     (tpe-tagged or untagged) entries are budget-charged,
+                     foreign-strategy entries are free model evidence
+      seed           rng seed — the proposed-config stream is a pure function
+                     of (seed, told results), independent of batch size
+    """
+
+    supports_history = True  # tuner feeds the persistent eval cache in
+
+    def __init__(
+        self,
+        space: TunableSpace,
+        *,
+        fixed: Optional[Dict[str, Any]] = None,
+        max_trials: int = 48,
+        n_startup: Optional[int] = None,
+        gamma: float = 0.25,
+        n_candidates: int = 24,
+        round_size: int = 8,
+        prior_weight: float = 1.0,
+        seed: int = 0,
+        history: Optional[Sequence[Tuple[Dict[str, Any], float]]] = None,
+    ):
+        super().__init__()
+        import random
+
+        self.space = space
+        self.fixed = dict(fixed or {})
+        self.max_trials = int(max_trials)
+        self.gamma = float(gamma)
+        self.n_candidates = max(1, int(n_candidates))
+        self.round_size = max(1, int(round_size))
+        self.prior_weight = float(prior_weight)
+        self.rng = random.Random(seed)
+        self.n_startup = int(n_startup) if n_startup is not None else min(
+            10, max(4, self.max_trials // 4)
+        )
+
+        self._free = [p for p in space.params if p.name not in self.fixed]
+        self._observations: List[Tuple[Dict[str, Any], float]] = []
+        self._paid = 0  # budget-charged observations (own proposals only)
+        self._best_config: Optional[Dict[str, Any]] = None
+        self._best_time = float("inf")
+        self._rounds = 0
+
+        for entry in history or ():
+            cfg, t = entry[0], float(entry[1])
+            tag = entry[2] if len(entry) > 2 else None
+            full = self._canon(cfg)
+            if full is None:
+                continue  # foreign-space record / violates `fixed`
+            # charge own proposals (tpe-tagged cache records; untagged =
+            # explicit history) against the budget; another strategy's
+            # records are free evidence, not budget theft
+            charged = tag is None or str(tag).startswith("tpe")
+            self._record(full, t, charged=charged)
+        self.warm_started = len(self._observations)
+
+        self.tag = "tpe/startup"
+        self._refill()
+
+    # ------------------------------------------------------------ bookkeeping
+
+    def _canon(self, cfg: Dict[str, Any]) -> Optional[Dict[str, Any]]:
+        """Snap a config onto this space; None if it belongs to a different
+        space (doesn't cover this one's knobs — a foreign cache record must
+        not collapse to the defaults and eat budget) or contradicts the
+        pinned ``fixed`` values."""
+        if not all(p.name in cfg for p in self.space.params):
+            return None
+        full = {p.name: p.snap(cfg[p.name]) for p in self.space.params}
+        for k, v in self.fixed.items():
+            if k in cfg and cfg[k] != v:
+                return None
+            full[k] = v
+        return full
+
+    def _record(self, cfg: Dict[str, Any], t: float, charged: bool = True) -> None:
+        self._observations.append((cfg, t))
+        if charged:
+            self._paid += 1
+        if t < self._best_time:
+            self._best_config, self._best_time = dict(cfg), t
+
+    # -- QueueStrategy hooks
+
+    def _observe(self, trial: Trial) -> None:
+        full = self._canon(trial.config)
+        if full is not None:
+            self._record(full, trial.time_s)
+
+    def _on_batch_done(self) -> None:
+        self._refill()
+
+    def _refill(self) -> None:
+        remaining = self.max_trials - self._paid
+        if remaining <= 0:
+            self._finished = True
+            return
+        n_obs = len(self._observations)  # any evidence defuses random startup
+        if n_obs < self.n_startup:
+            k = min(remaining, self.n_startup - n_obs)
+            self.tag = "tpe/startup"
+            seen = {config_key(c) for c, _ in self._observations}
+            batch: List[Dict[str, Any]] = []
+            for _ in range(k):
+                cfg = self._random_config(seen)
+                seen.add(config_key(cfg))
+                batch.append(cfg)
+            self._pending = batch
+        else:
+            self._rounds += 1
+            self.tag = f"tpe/round{self._rounds}"
+            self._pending = self._propose_round(min(remaining, self.round_size))
+
+    # ------------------------------------------------------------- proposals
+
+    def _random_config(self, seen) -> Dict[str, Any]:
+        for _ in range(16):  # bounded novelty retries (spaces can exhaust)
+            cfg = {p.name: p.sample(self.rng) for p in self._free}
+            cfg.update(self.fixed)
+            if config_key(cfg) not in seen:
+                return cfg
+        return cfg
+
+    def _worst_finite(self) -> float:
+        finite = [t for _, t in self._observations if math.isfinite(t)]
+        return max(finite) if finite else 1.0
+
+    def _split(
+        self, obs: List[Tuple[Dict[str, Any], float]]
+    ) -> Tuple[List[Dict[str, Any]], List[Dict[str, Any]]]:
+        ranked = sorted(obs, key=lambda ct: ct[1])  # stable: insertion order ties
+        n_good = max(1, min(len(ranked) - 1, int(math.ceil(self.gamma * len(ranked)))))
+        return [c for c, _ in ranked[:n_good]], [c for c, _ in ranked[n_good:]]
+
+    def _propose_round(self, k: int) -> List[Dict[str, Any]]:
+        """k EI-ranked proposals; each one conditions the next via a constant
+        lie at the worst observed objective (in-flight configs fall into the
+        bad density, so l/g repels repeats — batch diversity)."""
+        lie = self._worst_finite()
+        lies: List[Tuple[Dict[str, Any], float]] = []
+        seen = {config_key(c) for c, _ in self._observations}
+        out: List[Dict[str, Any]] = []
+        for _ in range(k):
+            good, bad = self._split(self._observations + lies)
+            cfg = self._sample_ei(good, bad, seen)
+            seen.add(config_key(cfg))
+            lies.append((cfg, lie))
+            out.append(cfg)
+        return out
+
+    def _sample_ei(self, good, bad, seen) -> Dict[str, Any]:
+        l_dens = {p.name: _density(p, [c[p.name] for c in good], self.prior_weight)
+                  for p in self._free}
+        g_dens = {p.name: _density(p, [c[p.name] for c in bad], self.prior_weight)
+                  for p in self._free}
+        novel_best, novel_score = None, -math.inf
+        for _ in range(self.n_candidates):
+            cfg = {name: d.sample(self.rng) for name, d in l_dens.items()}
+            cfg.update(self.fixed)
+            score = sum(
+                l_dens[n].logpdf(cfg[n]) - g_dens[n].logpdf(cfg[n]) for n in l_dens
+            )
+            if config_key(cfg) not in seen and score > novel_score:
+                novel_best, novel_score = cfg, score
+        if novel_best is not None:
+            return novel_best
+        # every candidate already observed/in-flight: fall back to exploration
+        # (which itself retries for novelty before giving up)
+        return self._random_config(seen)
+
+    # ---------------------------------------------------------------- result
+
+    def result(self) -> TPEResult:
+        return TPEResult(
+            best_config=dict(self._best_config or {}),
+            best_time=self._best_time,
+            rounds=self._rounds,
+            evaluations=0,  # stamped by TrialScheduler.run
+            n_observations=len(self._observations),
+            warm_started=self.warm_started,
+        )

@@ -1,7 +1,7 @@
 """Admin facade (paper Figure I): pick a platform and an algorithm, run the
 tuning, get the best configuration + the reduction vs. the all-defaults run.
 
-Every algorithm — gsft, crs, hillclimb, and whatever registers next — runs
+Every algorithm — gsft, crs, hillclimb, tpe, and whatever registers next — runs
 through the same ask/tell ``Strategy`` + ``TrialScheduler`` engine, so the
 engine knobs (``max_workers`` parallel batches, ``cache_path`` persistent
 evaluation cache, ``patience`` pruning, per-trial ``timeout_s``/``retries``)
@@ -28,6 +28,7 @@ class TuneOutcome:
     evaluations: int
     detail: Any = None
     cache_stats: Optional[Dict[str, int]] = None
+    timeouts: int = 0  # trials that hit the (soft) per-trial deadline
 
     @property
     def reduction_pct(self) -> float:
@@ -45,6 +46,7 @@ class TuneOutcome:
             "best_time_s": self.best_time,
             "reduction_pct": round(self.reduction_pct, 2),
             "evaluations": self.evaluations,
+            "timeouts": self.timeouts,
             "best_config": self.best_config,
         }
         if self.cache_stats:
@@ -88,13 +90,22 @@ def tune(
             retries=retries,
         )
 
-    defaults = {**space.defaults(), **(fixed or {})}
-    default_time = scheduler.evaluate(defaults, tag="default")
-
     if algorithm not in STRATEGIES:
         raise ValueError(
             f"unknown algorithm {algorithm!r} (use one of {sorted(STRATEGIES)})"
         )
+    # warm-start a model-based strategy (TPE) from the persistent eval cache
+    # *before* the defaults trial lands in it: a re-run over a complete cache
+    # resumes with its full observation history and proposes nothing fresh
+    if (
+        getattr(STRATEGIES[algorithm], "supports_history", False)
+        and "history" not in algo_kwargs
+    ):
+        algo_kwargs["history"] = scheduler.cached_observations()
+
+    defaults = {**space.defaults(), **(fixed or {})}
+    default_time = scheduler.evaluate(defaults, tag="default")
+
     if algorithm in ("gsft", "grid"):
         algo_kwargs.setdefault("active_params", active_params)
     strategy = make_strategy(algorithm, space, fixed=fixed, **algo_kwargs)
@@ -114,4 +125,5 @@ def tune(
         evaluations=scheduler.num_evaluations,
         detail=result,
         cache_stats=scheduler.cache_stats(),
+        timeouts=scheduler.timeout_trials,
     )

@@ -92,9 +92,13 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--cells", nargs="+", required=True,
                     metavar="ARCH:SHAPE", help="e.g. llama3.2-1b:train_4k")
-    ap.add_argument("--algorithm", default="gsft", choices=["gsft", "crs"])
+    ap.add_argument("--algorithm", "--strategy", dest="algorithm", default="gsft",
+                    choices=["gsft", "crs", "tpe"])
     ap.add_argument("--chips", type=int, default=256)
     ap.add_argument("--samples", type=int, default=2)
+    ap.add_argument("--budget", type=int, default=32,
+                    help="tpe per-cell trial budget (shared-cache history counts)")
+    ap.add_argument("--seed", type=int, default=0, help="crs/tpe rng seed")
     ap.add_argument("--cache", type=Path, default=Path("results/eval_cache.jsonl"))
     ap.add_argument("--log-dir", type=Path, default=Path("results/multicell"))
     ap.add_argument("--out", type=Path, default=Path("results/multicell/summary.json"))
@@ -102,7 +106,12 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=None)
     args = ap.parse_args(argv)
 
-    algo_kwargs = {"samples_per_param": args.samples} if args.algorithm == "gsft" else {}
+    if args.algorithm == "gsft":
+        algo_kwargs = {"samples_per_param": args.samples}
+    elif args.algorithm == "crs":
+        algo_kwargs = {"seed": args.seed}
+    else:  # tpe — each cell warm-starts from its own slice of the shared cache
+        algo_kwargs = {"max_trials": args.budget, "seed": args.seed}
     outcomes = tune_cells(
         args.cells,
         algorithm=args.algorithm,

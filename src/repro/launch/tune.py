@@ -14,6 +14,13 @@ reproduction), four trials at a time with a persistent evaluation cache:
         --algorithm crs --jobs 4 --cache results/eval_cache.jsonl
 
 A warm-cache re-run of the same command performs zero fresh evaluations.
+
+TPE (model-based, batched acquisition) on the same platform — the persistent
+cache also warm-starts its observation history, so a crashed or repeated
+session resumes with the budget it already spent:
+
+    PYTHONPATH=src python -m repro.launch.tune --platform wordcount \
+        --strategy tpe --budget 48 --jobs 4 --cache results/eval_cache.jsonl
 """
 import os
 
@@ -60,7 +67,8 @@ def engine_kwargs(args) -> dict:
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--platform", default="train", choices=["train", "serve", "wordcount"])
-    ap.add_argument("--algorithm", default="gsft", choices=["gsft", "crs"])
+    ap.add_argument("--algorithm", "--strategy", dest="algorithm", default="gsft",
+                    choices=["gsft", "crs", "tpe"])
     ap.add_argument("--arch", default="llama3.2-1b", choices=ARCH_NAMES)
     ap.add_argument("--shape", default="train_4k", choices=list(SHAPES))
     ap.add_argument("--evaluator", default="roofline", choices=["roofline", "walltime"])
@@ -70,6 +78,13 @@ def main(argv=None):
     ap.add_argument("--m", type=int, default=12, help="crs draws per round")
     ap.add_argument("--k", type=int, default=4, help="crs survivors")
     ap.add_argument("--rounds", type=int, default=4)
+    ap.add_argument("--budget", type=int, default=48,
+                    help="tpe total trial budget (cache history counts toward it)")
+    ap.add_argument("--startup", type=int, default=None,
+                    help="tpe random trials before the first model round")
+    ap.add_argument("--round-size", type=int, default=8,
+                    help="tpe proposals per acquisition round (size --jobs to this)")
+    ap.add_argument("--seed", type=int, default=0, help="crs/tpe rng seed")
     ap.add_argument("--log", type=Path, default=Path("results/tune_log.jsonl"))
     ap.add_argument("--out", type=Path, default=None, help="write best config JSON")
     add_engine_args(ap)
@@ -90,13 +105,17 @@ def main(argv=None):
         evaluator = RooflineEvaluator(arch, shape, space, chips=args.chips)
         active = args.active or list(space.most_influential)
 
-    kwargs = (
-        dict(active_params=active, samples_per_param=args.samples)
-        if args.algorithm == "gsft"
-        else dict(m=args.m, k=args.k, max_rounds=args.rounds)
-    )
+    if args.algorithm == "gsft":
+        kwargs = dict(active_params=active, samples_per_param=args.samples)
+    elif args.algorithm == "crs":
+        kwargs = dict(m=args.m, k=args.k, max_rounds=args.rounds, seed=args.seed)
+    else:  # tpe — warm-starts its observation history from --cache on re-runs
+        kwargs = dict(max_trials=args.budget, n_startup=args.startup,
+                      round_size=args.round_size, seed=args.seed)
+    # the real platform name namespaces the persistent cache — wordcount
+    # records must never alias the roofline "train" platform's
     outcome = tune(
-        args.platform if args.platform != "wordcount" else "train",
+        args.platform,
         args.algorithm,
         evaluator,
         space=space,

@@ -1,0 +1,239 @@
+"""Property-based tests for ``repro.core.space`` — the invariants every
+strategy (grid phases, CRS bound contraction, TPE kernel sampling) leans on:
+
+  - ``snap`` is idempotent and always lands in bounds / in choices
+  - ``grid(num)`` is sorted, deduplicated, and within range
+  - ``sample(rng, lo, hi)`` respects the override window (up to one snap
+    quantum of slack for stepped/pow2 integer knobs)
+  - ``pow2`` snapping returns powers of two (or the 0 sentinel when lo == 0)
+
+The checks live in plain ``_check_*`` helpers. The ``@given`` wrappers drive
+them from hypothesis (via the optional shim in ``_hyp`` — clean skip when
+hypothesis is absent); the ``test_*_fallback`` loops drive the *same* helpers
+from a seeded rng so the invariants stay enforced on a bare install too.
+
+NOTE on pow2 bounds: ``snap`` is only contractive when the bounds themselves
+are powers of two (or the 0 sentinel) — ``IntParam(lo=3, pow2=True)`` would
+oscillate 3 -> 4. Every shipped space satisfies this, and the generators
+below only build pow2 params with representable bounds.
+"""
+import math
+import random
+
+from _hyp import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.core.space import CatParam, FloatParam, IntParam, SPACES
+from repro.apps.wordcount import WORDCOUNT_SPACE
+
+_POW2_LOS = (0, 1, 2, 4, 8, 16)
+_POW2_HIS = (16, 32, 64, 128, 512, 2048)
+_CHOICES = ("alpha", "beta", "gamma", "delta", "epsilon")
+
+
+def _is_pow2(v) -> bool:
+    v = int(v)
+    return v >= 1 and (v & (v - 1)) == 0
+
+
+# ------------------------------------------------------------ check helpers
+
+
+def _check_snap(p, raw):
+    """snap is idempotent and in bounds / in choices."""
+    s = p.snap(raw)
+    assert p.snap(s) == s, (p, raw, s)
+    if isinstance(p, CatParam):
+        assert s in p.choices
+    else:
+        assert p.lo <= s <= p.hi, (p, raw, s)
+    if getattr(p, "pow2", False):
+        assert s == 0 or _is_pow2(s), (p, raw, s)
+        if s == 0:
+            assert p.lo == 0
+
+
+def _check_grid(p, num):
+    """grid(num) is non-empty, sorted, deduped, within range."""
+    g = p.grid(num)
+    assert g, (p, num)
+    if isinstance(p, CatParam):
+        assert list(g) == list(p.choices)  # full choice set, num ignored
+        return
+    assert g == sorted(g), (p, num, g)
+    assert len(set(g)) == len(g), (p, num, g)
+    for v in g:
+        assert p.lo <= v <= p.hi, (p, num, v)
+        if getattr(p, "pow2", False):
+            assert v == 0 or _is_pow2(v)
+
+
+def _check_sample_overrides(p, rng, frac_lo, frac_hi):
+    """sample(rng, lo, hi) stays inside the override window (modulo one snap
+    quantum for stepped ints, one pow2 rounding for pow2 ints)."""
+    if isinstance(p, CatParam):
+        assert p.sample(rng) in p.choices
+        return
+    lo2 = p.lo + frac_lo * (p.hi - p.lo)
+    hi2 = lo2 + frac_hi * (p.hi - lo2)
+    v = p.sample(rng, lo2, hi2)
+    assert p.lo <= v <= p.hi, (p, lo2, hi2, v)
+    if isinstance(p, FloatParam):
+        assert lo2 - 1e-9 <= v <= hi2 + 1e-9, (p, lo2, hi2, v)
+    elif getattr(p, "pow2", False):
+        # nearest-pow2 rounding moves a value by < 2x either way
+        assert v == 0 or (v >= max(p.lo, lo2 / 2 - 1) and v <= min(p.hi, 2 * hi2 + 1)), \
+            (p, lo2, hi2, v)
+        if v == 0:
+            assert p.lo == 0 and lo2 < 1
+    else:
+        assert lo2 - p.step <= v <= hi2 + p.step, (p, lo2, hi2, v)
+
+
+def _check_pow2_snap(p, raw):
+    v = p.snap(raw)
+    assert v == 0 or _is_pow2(v), (p, raw, v)
+    assert p.lo <= v <= p.hi
+
+
+# ------------------------------------------------------- param constructors
+
+
+def _int_param(lo, width, step):
+    return IntParam("k", lo, lo=lo, hi=lo + width, step=step)
+
+
+def _pow2_param(lo, hi):
+    hi = max(hi, lo, 1)
+    return IntParam("k", max(lo, 1), lo=lo, hi=hi, pow2=True)
+
+
+def _float_param(lo, width):
+    return FloatParam("k", lo, lo=lo, hi=lo + width, step=max(width / 10.0, 1e-6))
+
+
+def _cat_param(n):
+    choices = _CHOICES[: max(1, min(n, len(_CHOICES)))]
+    return CatParam("k", choices[0], choices=choices)
+
+
+ALL_SHIPPED_PARAMS = [
+    p for space in (*SPACES.values(), WORDCOUNT_SPACE) for p in space.params
+]
+
+
+# -------------------------------------------------------- hypothesis drivers
+
+
+@given(st.integers(-200, 200), st.integers(0, 500), st.integers(1, 64),
+       st.integers(-100_000, 100_000))
+@settings(max_examples=150, deadline=None)
+def test_property_int_snap_idempotent_inbounds(lo, width, step, raw):
+    _check_snap(_int_param(lo, width, step), raw)
+
+
+@given(st.sampled_from(_POW2_LOS), st.sampled_from(_POW2_HIS),
+       st.integers(-10, 100_000))
+@settings(max_examples=150, deadline=None)
+def test_property_pow2_snap_returns_powers_of_two(lo, hi, raw):
+    if max(lo, 1) <= hi:
+        p = _pow2_param(lo, hi)
+        _check_pow2_snap(p, raw)
+        _check_snap(p, raw)
+
+
+@given(st.floats(-1e3, 1e3), st.floats(1e-3, 1e3), st.floats(-1e6, 1e6))
+@settings(max_examples=150, deadline=None)
+def test_property_float_snap_idempotent_inbounds(lo, width, raw):
+    _check_snap(_float_param(lo, width), raw)
+
+
+@given(st.integers(1, 5), st.text(min_size=0, max_size=3))
+@settings(max_examples=50, deadline=None)
+def test_property_cat_snap_lands_in_choices(n, raw):
+    _check_snap(_cat_param(n), raw)
+
+
+@given(st.integers(-200, 200), st.integers(1, 500), st.integers(1, 64),
+       st.integers(1, 9))
+@settings(max_examples=150, deadline=None)
+def test_property_int_grid_sorted_deduped_inrange(lo, width, step, num):
+    _check_grid(_int_param(lo, width, step), num)
+
+
+@given(st.sampled_from(_POW2_LOS), st.sampled_from(_POW2_HIS), st.integers(1, 9))
+@settings(max_examples=100, deadline=None)
+def test_property_pow2_grid_sorted_deduped_inrange(lo, hi, num):
+    if max(lo, 1) <= hi:
+        _check_grid(_pow2_param(lo, hi), num)
+
+
+@given(st.floats(-1e3, 1e3), st.floats(1e-3, 1e3), st.integers(1, 9))
+@settings(max_examples=150, deadline=None)
+def test_property_float_grid_sorted_deduped_inrange(lo, width, num):
+    _check_grid(_float_param(lo, width), num)
+
+
+@given(st.integers(0, 2**16), st.floats(0.0, 1.0), st.floats(0.0, 1.0))
+@settings(max_examples=150, deadline=None)
+def test_property_sample_respects_overrides_int(seed, frac_lo, frac_hi):
+    rng = random.Random(seed)
+    _check_sample_overrides(_int_param(-50, 200, 7), rng, frac_lo, frac_hi)
+    _check_sample_overrides(_int_param(0, 10, 1), rng, frac_lo, frac_hi)
+
+
+@given(st.integers(0, 2**16), st.floats(0.0, 1.0), st.floats(0.0, 1.0))
+@settings(max_examples=150, deadline=None)
+def test_property_sample_respects_overrides_pow2_float_cat(seed, frac_lo, frac_hi):
+    rng = random.Random(seed)
+    _check_sample_overrides(_pow2_param(1, 2048), rng, frac_lo, frac_hi)
+    _check_sample_overrides(_pow2_param(0, 128), rng, frac_lo, frac_hi)
+    _check_sample_overrides(_float_param(0.025, 0.875), rng, frac_lo, frac_hi)
+    _check_sample_overrides(_cat_param(4), rng, frac_lo, frac_hi)
+
+
+@given(st.integers(0, 2**16))
+@settings(max_examples=50, deadline=None)
+def test_property_shipped_spaces_hold_invariants(seed):
+    """Every param of the train/serve/wordcount spaces satisfies all four
+    invariant families at once."""
+    rng = random.Random(seed)
+    for p in ALL_SHIPPED_PARAMS:
+        raw = rng.uniform(-1e5, 1e5)
+        _check_snap(p, raw if p.numeric else "bogus")
+        _check_grid(p, rng.randint(1, 8))
+        _check_sample_overrides(p, rng, rng.random(), rng.random())
+
+
+# --------------------------------------- seeded fallback (no hypothesis req.)
+
+
+def test_fallback_snap_grid_sample_invariants():
+    """The same helpers, driven by a seeded rng — keeps the invariants
+    enforced (and this module honest) when hypothesis is not installed."""
+    rng = random.Random(0)
+    for _ in range(200):
+        params = [
+            _int_param(rng.randint(-200, 200), rng.randint(0, 500), rng.randint(1, 64)),
+            _float_param(rng.uniform(-1e3, 1e3), rng.uniform(1e-3, 1e3)),
+            _cat_param(rng.randint(1, 5)),
+        ]
+        lo = rng.choice(_POW2_LOS)
+        hi = rng.choice(_POW2_HIS)
+        if max(lo, 1) <= hi:
+            params.append(_pow2_param(lo, hi))
+        for p in params:
+            raw = rng.uniform(-1e5, 1e5)
+            _check_snap(p, raw if p.numeric else "bogus")
+            _check_grid(p, rng.randint(1, 8))
+            _check_sample_overrides(p, rng, rng.random(), rng.random())
+            if getattr(p, "pow2", False):
+                _check_pow2_snap(p, rng.randint(-10, 100_000))
+
+
+def test_fallback_shipped_spaces_hold_invariants():
+    rng = random.Random(1)
+    for _ in range(25):
+        for p in ALL_SHIPPED_PARAMS:
+            _check_snap(p, rng.uniform(-1e5, 1e5) if p.numeric else "bogus")
+            _check_grid(p, rng.randint(1, 8))
+            _check_sample_overrides(p, rng, rng.random(), rng.random())

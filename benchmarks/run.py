@@ -40,8 +40,17 @@ def main(argv=None):
                     choices=["all", "gsft", "crs", "tpe"],
                     help="which search strategy's tables to run (default all, "
                          "incl. the GSFT-vs-CRS-vs-TPE shootout)")
+    ap.add_argument("--isolation", default="inline",
+                    choices=["inline", "subprocess"],
+                    help="trial execution backend for every table run: "
+                         "inline threads or hard-deadline worker processes")
+    ap.add_argument("--trial-timeout", "--timeout", dest="trial_timeout",
+                    type=float, default=None,
+                    help="per-trial timeout in seconds (hard SIGKILL under "
+                         "--isolation subprocess)")
     args = ap.parse_args(argv)
-    tables.ENGINE.update(max_workers=args.jobs, cache_path=args.cache)
+    tables.ENGINE.update(max_workers=args.jobs, cache_path=args.cache,
+                         isolation=args.isolation, timeout_s=args.trial_timeout)
 
     t0 = time.time()
     all_rows = []

@@ -162,10 +162,22 @@ def wordcount_reference(corpus: np.ndarray, vocab: int = VOCAB) -> np.ndarray:
 
 
 def make_evaluator(corpus=None, repeats: int = 2):
-    """WalltimeEvaluator wired to WordCount (paper-faithful measured loop)."""
-    from repro.core.evaluators import WalltimeEvaluator
+    """WalltimeEvaluator wired to WordCount (paper-faithful measured loop).
 
+    The attached ``spec`` lets subprocess workers rebuild this evaluator by
+    importing this module — the builder closure itself can't be pickled. A
+    custom corpus travels inside the spec as a plain numpy array."""
+    from repro.core.evaluators import WalltimeEvaluator
+    from repro.core.executors import EvaluatorSpec
+
+    spec_kwargs: Dict[str, Any] = {"repeats": repeats}
+    if corpus is not None:
+        spec_kwargs["corpus"] = np.asarray(corpus)
     corpus = corpus if corpus is not None else make_corpus()
     return WalltimeEvaluator(
-        builder=lambda cfg: build_wordcount(cfg, corpus), repeats=repeats
+        builder=lambda cfg: build_wordcount(cfg, corpus),
+        repeats=repeats,
+        spec=EvaluatorSpec.factory(
+            "repro.apps.wordcount:make_evaluator", **spec_kwargs
+        ),
     )

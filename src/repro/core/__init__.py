@@ -3,6 +3,8 @@
   - ``space``      — the curated 12-train / 11-serve knob tables (§III)
   - ``scheduler``  — TrialScheduler: batched/cached/pruned trial execution
                      (grown from the paper's CMPE, §VII)
+  - ``executors``  — trial isolation backends: inline threads (soft
+                     timeouts) / subprocess workers (hard SIGKILL deadlines)
   - ``cmpe``       — back-compat serial CMPE facade over the scheduler
   - ``strategies`` — ask/tell Strategy engine: gsft, crs, hillclimb, tpe
   - ``grid_finer`` — Algorithm I wrapper: Grid Search with Finer Tuning (§VIII)
@@ -14,6 +16,13 @@
 """
 from repro.core.cmpe import CMPE, best_from_log, read_log
 from repro.core.crs import CRSResult, controlled_random_search
+from repro.core.executors import (
+    EvaluatorSpec,
+    ExecutionBackend,
+    InlineBackend,
+    SubprocessBackend,
+    make_backend,
+)
 from repro.core.grid_finer import GridResult, grid_search_finer_tuning
 from repro.core.scheduler import Trial, TrialScheduler, config_hash, config_key
 from repro.core.space import SERVE_SPACE, SPACES, TRAIN_SPACE, TunableSpace
@@ -36,9 +45,13 @@ __all__ = [
     "CRSResult",
     "CRSStrategy",
     "CuratedHillclimbStrategy",
+    "EvaluatorSpec",
+    "ExecutionBackend",
     "GridFinerStrategy",
     "GridResult",
     "HillclimbResult",
+    "InlineBackend",
+    "SubprocessBackend",
     "Move",
     "SERVE_SPACE",
     "SPACES",
@@ -55,6 +68,7 @@ __all__ = [
     "config_key",
     "controlled_random_search",
     "grid_search_finer_tuning",
+    "make_backend",
     "make_strategy",
     "read_log",
     "register_strategy",

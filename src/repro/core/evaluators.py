@@ -30,7 +30,13 @@ from repro.core.space import TunableSpace
 
 @dataclass
 class FunctionEvaluator:
+    """Wraps a plain function. Picklable whenever ``fn`` is a module-level
+    function — which makes it subprocess-isolatable as-is; for closures and
+    lambdas attach an :class:`~repro.core.executors.EvaluatorSpec` via
+    ``spec`` instead."""
+
     fn: Callable[[Dict[str, Any]], float]
+    spec: Optional[Any] = None  # EvaluatorSpec for subprocess workers
 
     def __call__(self, config: Dict[str, Any]) -> Tuple[float, Dict[str, Any]]:
         return float(self.fn(config)), {}
@@ -49,6 +55,7 @@ class WalltimeEvaluator:
     builder: Callable[[Dict[str, Any]], Callable[[], Any]]
     repeats: int = 3
     parallel_safe: bool = True
+    spec: Optional[Any] = None  # EvaluatorSpec — builders are usually closures
 
     def __call__(self, config: Dict[str, Any]) -> Tuple[float, Dict[str, Any]]:
         job = self.builder(config)
@@ -78,9 +85,17 @@ class RooflineEvaluator:
     multi_pod: bool = False
     memory_penalty: str = "soft"  # soft | inf
     parallel_safe: bool = False
+    spec: Optional[Any] = None  # EvaluatorSpec for subprocess workers
 
     def __post_init__(self):
         self._probe_memo: Dict[Tuple[Any, int], Tuple[float, Dict[str, Any]]] = {}
+
+    def __getstate__(self):
+        # subprocess isolation pickles the evaluator into each worker —
+        # compiled probes must never cross a process boundary
+        state = self.__dict__.copy()
+        state["_probe_memo"] = {}
+        return state
 
     def __call__(self, config: Dict[str, Any]) -> Tuple[float, Dict[str, Any]]:
         run = self.space.to_run_config(config, self.base_run)

@@ -1,0 +1,479 @@
+"""Execution backends for :class:`repro.core.scheduler.TrialScheduler` — the
+per-trial isolation seam.
+
+The paper's CMPE restarts the Hadoop/Spark daemons between trials precisely
+because a bad configuration can wedge the job. The scheduler's thread path
+cannot reproduce that guarantee: Python threads cannot be killed, so a hung
+trial keeps its core and memory until interpreter exit ("soft" timeout).
+This module makes isolation pluggable:
+
+  - ``InlineBackend``   (``isolation="inline"``, the default) — the original
+    in-process path: serial or thread-pool evaluation, soft timeouts. Fast,
+    zero setup cost, byte-for-byte compatible logs.
+  - ``SubprocessBackend`` (``isolation="subprocess"``) — each fresh trial runs
+    in a long-lived **worker process** built from a picklable
+    :class:`EvaluatorSpec`. The deadline is *hard*: a trial that overruns
+    ``timeout_s`` gets SIGKILLed and reaped, a segfaulting / ``os._exit``-ing
+    / OOM-killed trial becomes a ``status="error"`` Trial instead of a dead
+    tuning session, and workers are **reused warm** across trials and batches
+    so device/jit initialisation is paid once per worker, not per trial.
+
+Worker protocol (one duplex pipe per worker):
+
+    parent -> worker   ("run", seq, config, clear_caches) | ("exit",)
+    worker -> parent   ("ready", pid)
+                       ("init_error", message)
+                       ("ok", seq, time_s, scalar_info, eval_wall_s)
+                       ("err", seq, message, eval_wall_s)
+
+A worker that vanishes mid-trial surfaces as EOF on its pipe; the parent
+reaps it, records the trial, and respawns a replacement lazily. Because
+worker processes isolate all global compiler state, the subprocess backend
+runs ``parallel_safe=False`` evaluators (e.g. ``RooflineEvaluator``)
+concurrently — the flag only constrains the shared-interpreter thread path.
+"""
+from __future__ import annotations
+
+import multiprocessing as mp
+import os
+import pickle
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from importlib import import_module
+from multiprocessing.connection import wait as _mp_wait
+from typing import Any, Callable, Dict, List, Optional, Tuple, Union
+
+from repro.core.scheduler import Trial, _scalar_info
+
+__all__ = [
+    "EvaluatorSpec",
+    "ExecutionBackend",
+    "InlineBackend",
+    "SubprocessBackend",
+    "make_backend",
+]
+
+
+# ---------------------------------------------------------------- spec layer
+
+
+@dataclass
+class EvaluatorSpec:
+    """Picklable recipe for constructing an Evaluator inside a worker.
+
+    ``target`` is either a ``"pkg.module:attr"`` dotted path (resolved by
+    import in the worker — survives any start method) or a picklable
+    callable. With ``construct=True`` the resolved object is called as
+    ``target(*args, **kwargs)`` and must return an Evaluator; with
+    ``construct=False`` the resolved object *is* the evaluator (the pickled
+    instance round-trips as-is).
+    """
+
+    target: Union[str, Callable[..., Any]]
+    args: Tuple[Any, ...] = ()
+    kwargs: Dict[str, Any] = field(default_factory=dict)
+    construct: bool = True
+
+    @classmethod
+    def factory(cls, target: Union[str, Callable[..., Any]], *args: Any,
+                **kwargs: Any) -> "EvaluatorSpec":
+        """Spec that calls ``target(*args, **kwargs)`` in the worker."""
+        return cls(target=target, args=args, kwargs=kwargs, construct=True)
+
+    @classmethod
+    def from_evaluator(cls, evaluator: Any) -> "EvaluatorSpec":
+        """Best spec for an evaluator instance: its attached ``.spec`` if it
+        carries one, else the pickled instance itself."""
+        spec = getattr(evaluator, "spec", None)
+        if isinstance(spec, EvaluatorSpec):
+            return spec
+        try:
+            pickle.dumps(evaluator)
+        except Exception as e:  # noqa: BLE001 — reported with guidance
+            raise TypeError(
+                f"{type(evaluator).__name__} cannot be shipped to a worker "
+                f"process (pickle failed: {e}). Attach a spec — e.g. "
+                "evaluator.spec = EvaluatorSpec.factory('pkg.mod:make_evaluator', "
+                "...) — or use isolation='inline'."
+            ) from e
+        return cls(target=evaluator, construct=False)
+
+    def resolve(self) -> Any:
+        obj = self.target
+        if isinstance(obj, str):
+            mod, _, attr = obj.partition(":")
+            if not attr:
+                raise ValueError(
+                    f"EvaluatorSpec target must be 'pkg.module:attr', got {obj!r}"
+                )
+            obj = getattr(import_module(mod), attr)
+        if not self.construct:
+            return obj
+        return obj(*self.args, **dict(self.kwargs))
+
+
+# -------------------------------------------------------------- worker child
+
+
+def _worker_main(conn, spec: EvaluatorSpec) -> None:
+    """Worker process loop: build the evaluator once (warm), then serve
+    trials until told to exit or killed."""
+    try:
+        evaluator = spec.resolve()
+    except BaseException as e:  # noqa: BLE001 — parent decides what to do
+        try:
+            conn.send(("init_error", f"{type(e).__name__}: {e}"))
+        finally:
+            return
+    conn.send(("ready", os.getpid()))
+    while True:
+        try:
+            msg = conn.recv()
+        except (EOFError, OSError):
+            return  # parent went away
+        if not msg or msg[0] == "exit":
+            return
+        _, seq, config, clear_caches = msg
+        if clear_caches:
+            try:
+                import jax
+
+                jax.clear_caches()
+            except Exception:  # noqa: BLE001 — evaluator may not use jax
+                pass
+        t0 = time.time()
+        try:
+            t, info = evaluator(config)
+            conn.send(("ok", seq, float(t), _scalar_info(dict(info)),
+                       time.time() - t0))
+        except Exception as e:  # noqa: BLE001 — a failed run is a trial
+            conn.send(("err", seq, f"{type(e).__name__}: {e}", time.time() - t0))
+
+
+# ------------------------------------------------------------- parent bookkeeping
+
+
+@dataclass
+class _Task:
+    key: str
+    config: Dict[str, Any]
+    attempt: int
+    seq: int
+    t0_wall: float  # time.time() at dispatch — Trial.wall_s base
+    deadline: Optional[float]  # time.monotonic() hard-kill point
+
+
+class _Worker:
+    """Parent-side handle: process + pipe + readiness/task state."""
+
+    def __init__(self, ctx, spec: EvaluatorSpec, init_timeout_s: float):
+        parent_conn, child_conn = ctx.Pipe()
+        self.proc = ctx.Process(
+            target=_worker_main, args=(child_conn, spec), daemon=True
+        )
+        self.proc.start()
+        child_conn.close()
+        self.conn = parent_conn
+        self.pid = self.proc.pid
+        self.ready = False
+        self.dead = False
+        self.task: Optional[_Task] = None
+        self.init_deadline = time.monotonic() + init_timeout_s
+
+    def kill(self) -> None:
+        """SIGKILL + reap. SIGKILL cannot be caught, so a wedged trial —
+        sleeping in C, spinning under the GIL, stuck in a collective — dies."""
+        self.dead = True
+        try:
+            self.proc.kill()
+        except Exception:  # noqa: BLE001
+            pass
+        self.proc.join(5.0)
+        try:
+            self.conn.close()
+        except Exception:  # noqa: BLE001
+            pass
+
+    def stop(self) -> None:
+        """Graceful shutdown; falls back to kill."""
+        if self.dead:
+            return
+        try:
+            self.conn.send(("exit",))
+        except Exception:  # noqa: BLE001
+            pass
+        self.proc.join(1.0)
+        if self.proc.is_alive():
+            self.kill()
+        else:
+            self.dead = True
+            try:
+                self.conn.close()
+            except Exception:  # noqa: BLE001
+                pass
+
+
+# ------------------------------------------------------------------ backends
+
+
+class ExecutionBackend:
+    """Where fresh trials run. ``bind`` receives the owning scheduler (the
+    source of evaluator, timeout/retry policy, and the persistence hook);
+    ``run_batch`` returns ``(key, Trial)`` pairs in plan order."""
+
+    name = "abstract"
+
+    def bind(self, scheduler) -> None:
+        self.sched = scheduler
+
+    def run_batch(
+        self, plan: List[Tuple[str, Dict[str, Any]]]
+    ) -> List[Tuple[str, Trial]]:
+        raise NotImplementedError
+
+    def close(self) -> None:  # noqa: B027 — optional hook
+        pass
+
+
+class InlineBackend(ExecutionBackend):
+    """The original in-process path: serial (or thread-pooled) evaluation via
+    the scheduler's ``_run_one`` / ``_run_parallel``, soft timeouts only.
+    ``clear_caches_between_trials`` forces the serial path with a global jit
+    cache clear before every fresh trial (clearing is global state)."""
+
+    name = "inline"
+
+    def run_batch(self, plan):
+        s = self.sched
+        if s.clear_caches:
+            import jax
+
+            out = []
+            for k, c in plan:
+                jax.clear_caches()
+                out.append((k, s._run_one(c)))
+            return out
+        parallel_ok = getattr(s.evaluator, "parallel_safe", True)
+        if s.max_workers > 1 and parallel_ok and len(plan) > 1:
+            return s._run_parallel(plan)
+        return [(k, s._run_one(c)) for k, c in plan]
+
+
+class SubprocessBackend(ExecutionBackend):
+    """Hard per-trial isolation: worker processes with SIGKILL deadlines.
+
+    - ``spec``: how workers construct the evaluator; defaults to
+      ``EvaluatorSpec.from_evaluator(scheduler.evaluator)`` at bind time.
+    - ``mp_context``: multiprocessing start method. ``"spawn"`` (default) is
+      safe after jax/XLA has initialised in the parent; ``"fork"`` starts
+      faster but inherits the parent's threads and is unsafe once jax is up.
+    - ``worker_init_timeout_s``: budget for worker startup (imports + device
+      init + evaluator construction). Init failures raise — they are
+      configuration errors, not trial failures.
+
+    Timeout semantics: the deadline clock starts when a config is dispatched
+    to an already-warm worker, so worker startup never eats trial budget. A
+    result that arrives before the kill but over the deadline keeps its real
+    measurement (``status="timeout"``, persisted), exactly like the inline
+    soft-timeout path.
+    """
+
+    name = "subprocess"
+
+    def __init__(
+        self,
+        *,
+        spec: Optional[EvaluatorSpec] = None,
+        mp_context: str = "spawn",
+        worker_init_timeout_s: float = 120.0,
+    ):
+        self.spec = spec
+        self.mp_context = mp_context
+        self.worker_init_timeout_s = float(worker_init_timeout_s)
+        self._ctx = mp.get_context(mp_context)
+        self._workers: List[_Worker] = []
+        self._seq = 0
+        # init-failure policy: before any worker has EVER come up, an init
+        # death is a configuration error and raises immediately; afterwards
+        # it is treated as transient (e.g. respawn under the memory pressure
+        # a contained OOM trial created) and retried a few times
+        self._ever_ready = False
+        self._init_failures = 0
+
+    def bind(self, scheduler) -> None:
+        super().bind(scheduler)
+        if self.spec is None:
+            self.spec = EvaluatorSpec.from_evaluator(scheduler.evaluator)
+
+    # -- pool plumbing
+
+    def _spawn(self) -> _Worker:
+        w = _Worker(self._ctx, self.spec, self.worker_init_timeout_s)
+        self._workers.append(w)
+        return w
+
+    _MAX_INIT_FAILURES = 3  # consecutive; any successful init resets
+
+    def _init_failed(self, detail: str) -> None:
+        """A worker never reached "ready". Raise for a cold pool or a streak
+        (deterministic breakage); otherwise let the pool respawn."""
+        self._init_failures += 1
+        if not self._ever_ready or self._init_failures >= self._MAX_INIT_FAILURES:
+            raise RuntimeError(detail)
+
+    def run_batch(self, plan):
+        s = self.sched
+        pending = deque((k, dict(c), 0) for k, c in plan)
+        done: Dict[str, Trial] = {}
+        target = max(1, min(s.max_workers, len(plan)))
+
+        def dispatch(w: _Worker, key: str, config: Dict[str, Any], attempt: int):
+            self._seq += 1
+            task = _Task(
+                key, config, attempt, self._seq, time.time(),
+                None if s.timeout_s is None
+                else time.monotonic() + s.timeout_s,
+            )
+            try:
+                w.conn.send(("run", task.seq, config, s.clear_caches))
+            except (BrokenPipeError, OSError):
+                # worker died while idle — not the trial's fault; requeue at
+                # the same attempt and let the pool respawn
+                w.kill()
+                pending.appendleft((key, config, attempt))
+                return
+            w.task = task
+
+        def settle_failure(t: _Task, error: str):
+            """Crash or evaluator exception: retry if budget allows."""
+            if t.attempt < s.retries:
+                pending.append((t.key, t.config, t.attempt + 1))
+            else:
+                done[t.key] = Trial(
+                    dict(t.config), s.infeasible_time, {},
+                    wall_s=time.time() - t.t0_wall, error=error, status="error",
+                )
+
+        def on_readable(w: _Worker):
+            try:
+                msg = w.conn.recv()
+            except (EOFError, OSError):
+                # hard crash: segfault, os._exit, OOM-kill — contain it
+                w.proc.join(1.0)  # reap so exitcode is real, not None
+                t, code = w.task, w.proc.exitcode
+                w.task = None
+                was_ready = w.ready
+                w.kill()
+                if t is not None:
+                    settle_failure(
+                        t, f"WorkerCrash: trial process pid {w.pid} died "
+                           f"(exit code {code})",
+                    )
+                elif not was_ready:
+                    self._init_failed(
+                        f"subprocess worker pid {w.pid} died during evaluator "
+                        f"construction (exit code {code})"
+                    )
+                return
+            kind = msg[0]
+            if kind == "ready":
+                w.ready = True
+                self._ever_ready = True
+                self._init_failures = 0
+                return
+            if kind == "init_error":
+                w.kill()
+                # an exception out of the evaluator factory is deterministic
+                # config breakage — always fatal, no retry
+                raise RuntimeError(
+                    f"evaluator construction failed in subprocess worker: {msg[1]}"
+                )
+            t = w.task
+            if t is None or msg[1] != t.seq:
+                return  # stale message from a superseded dispatch
+            w.task = None
+            if kind == "ok":
+                _, _, time_s, info, _eval_wall = msg
+                wall = time.time() - t.t0_wall
+                if s.timeout_s is not None and wall > s.timeout_s:
+                    trial = Trial(
+                        dict(t.config), float(time_s), dict(info), wall_s=wall,
+                        error=f"TrialTimeout: wall {wall:.1f}s > {s.timeout_s}s "
+                              "(completed over deadline; measurement kept)",
+                        status="timeout",
+                    )
+                else:
+                    trial = Trial(dict(t.config), float(time_s), dict(info),
+                                  wall_s=wall)
+                s._persist(trial)
+                done[t.key] = trial
+            else:  # "err" — exception inside the evaluator; worker stays warm
+                _, _, err, _eval_wall = msg
+                settle_failure(t, err)
+
+        while pending or any(w.task for w in self._workers):
+            self._workers = [w for w in self._workers if not w.dead]
+            busy = sum(1 for w in self._workers if w.task)
+            while len(self._workers) < min(target, busy + len(pending)):
+                self._spawn()
+            for w in self._workers:
+                if not pending:
+                    break
+                if w.ready and w.task is None and not w.dead:
+                    dispatch(w, *pending.popleft())
+
+            conns = {
+                w.conn: w for w in self._workers
+                if not w.dead and (w.task is not None or not w.ready)
+            }
+            if not conns:
+                continue  # everything respawning; loop to top up the pool
+            now = time.monotonic()
+            deadlines = [
+                w.task.deadline for w in conns.values()
+                if w.task is not None and w.task.deadline is not None
+            ] + [w.init_deadline for w in conns.values() if not w.ready]
+            wait_s = None if not deadlines else max(0.0, min(deadlines) - now)
+            for conn in _mp_wait(list(conns), timeout=wait_s):
+                on_readable(conns[conn])
+
+            now = time.monotonic()
+            for w in self._workers:
+                if w.dead:
+                    continue
+                t = w.task
+                if t is not None and t.deadline is not None and now >= t.deadline:
+                    w.task = None
+                    w.kill()  # the hard part: SIGKILL + reap, no appeal
+                    done[t.key] = Trial(
+                        dict(t.config), s.infeasible_time, {},
+                        wall_s=time.time() - t.t0_wall,
+                        error=f"TrialTimeout: exceeded hard deadline "
+                              f"{s.timeout_s}s — worker pid {w.pid} SIGKILLed",
+                        status="timeout",
+                    )
+                elif not w.ready and now >= w.init_deadline:
+                    w.kill()
+                    self._init_failed(
+                        f"subprocess worker pid {w.pid} failed to initialise "
+                        f"within {self.worker_init_timeout_s}s"
+                    )
+
+        return [(k, done[k]) for k, _ in plan]
+
+    def close(self) -> None:
+        for w in self._workers:
+            w.stop()
+        self._workers = []
+
+
+def make_backend(name: str, **options: Any) -> ExecutionBackend:
+    """Backend registry: ``inline`` | ``subprocess``."""
+    if name == "inline":
+        return InlineBackend()
+    if name in ("subprocess", "process"):
+        return SubprocessBackend(**options)
+    raise ValueError(
+        f"unknown isolation backend {name!r} (use 'inline' or 'subprocess')"
+    )

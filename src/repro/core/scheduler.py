@@ -14,6 +14,10 @@ This module grows that into a batched scheduler the ask/tell strategies
     single fresh evaluation,
   - **per-trial timeout / retry / infeasible penalty** — a hung or crashing
     trial becomes a logged infeasible trial instead of killing the session,
+  - **pluggable isolation** — fresh trials run through an
+    :class:`repro.core.executors.ExecutionBackend`: ``isolation="inline"``
+    (threads, soft timeouts — the default) or ``isolation="subprocess"``
+    (worker processes, hard SIGKILL deadlines, crash containment),
   - **early stopping** — ``run(strategy, patience=k)`` kills a sweep when the
     running best hasn't improved in k consecutive batches.
 
@@ -25,6 +29,7 @@ from __future__ import annotations
 
 import hashlib
 import json
+import math
 import threading
 import time
 from concurrent.futures import CancelledError, ThreadPoolExecutor
@@ -60,6 +65,14 @@ class Trial:
     def timed_out(self) -> bool:
         return self.status == "timeout"
 
+    @property
+    def score(self) -> float:
+        """What a strategy ranks on. A timeout Trial may carry its real
+        measured ``time_s`` (kept for resume accounting and analysis), but a
+        config that blows the deadline must never win the sweep — non-ok
+        trials score as infeasible."""
+        return self.time_s if self.ok else INFEASIBLE
+
 
 def config_key(config: Dict[str, Any]) -> str:
     """Canonical JSON of the config — the memo/log identity of a trial."""
@@ -94,6 +107,8 @@ class TrialScheduler:
         timeout_s: Optional[float] = None,
         retries: int = 0,
         infeasible_time: float = INFEASIBLE,
+        isolation: str = "inline",
+        backend: Optional[Any] = None,
     ):
         self.evaluator = evaluator
         self.platform = platform
@@ -122,13 +137,27 @@ class TrialScheduler:
         if self.cache_path:
             self._persistent = _load_cache(self.cache_path, self.platform)
             self.cache_path.parent.mkdir(parents=True, exist_ok=True)
+        if backend is None:
+            # local import: executors imports Trial from this module
+            from repro.core.executors import make_backend
+
+            backend = make_backend(isolation)
+        self.isolation = getattr(backend, "name", isolation)
+        self._backend = backend
+        self._backend.bind(self)
 
     # ------------------------------------------------------------------- api
 
     def evaluate(self, config: Dict[str, Any], tag: str = "") -> float:
         """Tune the platform to ``config``, run the job, return execution
-        time. Logs every call (the one-trial path the old CMPE exposed)."""
-        return self.evaluate_batch([config], tag=tag)[0].time_s
+        time. Logs every call (the one-trial path the old CMPE exposed).
+
+        The scalar return is a *rankable score*: a trial that completed over
+        the deadline keeps its real measurement on the Trial (and in the
+        cache) but scores as ``infeasible_time`` here, so legacy callers
+        comparing bare floats never crown a deadline-busting config."""
+        trial = self.evaluate_batch([config], tag=tag)[0]
+        return self.infeasible_time if trial.timed_out else trial.time_s
 
     def evaluate_batch(
         self, configs: Sequence[Dict[str, Any]], tag: str = ""
@@ -145,9 +174,19 @@ class TrialScheduler:
                 continue
             hit = self._persistent.get(config_hash(c))
             if hit is not None:
+                # replay preserves the measurement but re-judges a persisted
+                # over-deadline record against THIS session's deadline: a
+                # cache written under a tight timeout must not permanently
+                # poison configs whose measured wall now fits
+                status = hit.get("status", "ok")
+                error = hit.get("error")
+                if status == "timeout":
+                    rec_wall = float(hit.get("wall_s", INFEASIBLE))
+                    if self.timeout_s is None or rec_wall <= self.timeout_s:
+                        status, error = "ok", None
                 trial = Trial(
                     dict(c), float(hit["time_s"]), dict(hit.get("info", {})),
-                    wall_s=0.0, source="cache",
+                    wall_s=0.0, source="cache", error=error, status=status,
                 )
                 self.cache_hits += 1
                 self.trials.append(trial)
@@ -158,21 +197,9 @@ class TrialScheduler:
             first_served.add(k)
 
         if plan:
-            parallel_ok = getattr(self.evaluator, "parallel_safe", True)
-            if self.clear_caches:
-                # trial isolation (paper: config rewrite + daemon restart) —
-                # clearing the jit cache is global state, so isolation forces
-                # the serial path with a clear before every fresh trial
-                import jax
-
-                fresh = []
-                for k, c in plan:
-                    jax.clear_caches()
-                    fresh.append((k, self._run_one(c)))
-            elif self.max_workers > 1 and parallel_ok and len(plan) > 1:
-                fresh = self._run_parallel(plan)
-            else:
-                fresh = [(k, self._run_one(c)) for k, c in plan]
+            # how/where fresh trials run is the backend's business: inline
+            # (threads, soft timeouts) or subprocess (hard SIGKILL deadlines)
+            fresh = self._backend.run_batch(plan)
             for k, trial in fresh:
                 self.fresh_evaluations += 1
                 if trial.timed_out:
@@ -206,7 +233,13 @@ class TrialScheduler:
         """Drive an ask/tell strategy to completion (or early stop).
 
         ``patience=k`` prunes the sweep when the running best time has not
-        improved for k consecutive batches — the grid-pass killer."""
+        improved for k consecutive batches — the grid-pass killer.
+
+        Result accounting (``evaluations`` / ``timeouts``) reports **this
+        run's deltas**, not scheduler-lifetime totals — a shared multi-cell
+        scheduler must not inflate every cell's numbers."""
+        evals_before = self.num_evaluations
+        timeouts_before = self.timeout_trials
         best = INFEASIBLE
         stale = 0
         stopped_early = False
@@ -229,11 +262,11 @@ class TrialScheduler:
                 break
         result = strategy.result()
         if hasattr(result, "evaluations"):
-            result.evaluations = self.num_evaluations
+            result.evaluations = self.num_evaluations - evals_before
         if hasattr(result, "stopped_early"):
             result.stopped_early = stopped_early
         if hasattr(result, "timeouts"):
-            result.timeouts = self.timeout_trials
+            result.timeouts = self.timeout_trials - timeouts_before
         return result
 
     def best(self) -> Trial:
@@ -241,6 +274,25 @@ class TrialScheduler:
         if not ok:
             raise RuntimeError("no successful trials")
         return min(ok, key=lambda t: t.time_s)
+
+    def close(self) -> None:
+        """Release backend resources (warm subprocess workers). Idempotent;
+        a no-op for the inline backend."""
+        self._backend.close()
+
+    def __enter__(self) -> "TrialScheduler":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __del__(self):  # best-effort — don't leak worker processes
+        try:
+            backend = getattr(self, "_backend", None)
+            if backend is not None:
+                backend.close()
+        except Exception:  # noqa: BLE001
+            pass
 
     @property
     def num_evaluations(self) -> int:
@@ -267,11 +319,14 @@ class TrialScheduler:
         platform only, in file order — the warm-start history a model-based
         strategy (TPE) seeds its observation set from on resume. The tag
         carries provenance: a strategy charges only its *own* records against
-        its trial budget and treats the rest as free model observations."""
+        its trial budget and treats the rest as free model observations.
+        Persisted timeout records are excluded — an over-deadline measurement
+        must not feed a density model as if it were a clean observation."""
         return [
             (dict(rec["config"]), float(rec["time_s"]), rec.get("tag"))
             for rec in self._persistent.values()
             if "config" in rec and "time_s" in rec
+            and rec.get("status", "ok") == "ok"
         ]
 
     # ------------------------------------------------------------- execution
@@ -287,11 +342,14 @@ class TrialScheduler:
                 t, info = self.evaluator(config)
                 trial = Trial(dict(config), float(t), info, wall_s=time.time() - t0)
                 if self.timeout_s is not None and trial.wall_s > self.timeout_s:
-                    return Trial(
-                        dict(config), self.infeasible_time, info,
-                        wall_s=trial.wall_s,
+                    # completed over the soft deadline: the measurement is
+                    # real — keep and persist it (a resume must not re-pay
+                    # it); status="timeout" lets strategies score it (they
+                    # rank on Trial.score, which is infeasible for non-ok)
+                    trial = Trial(
+                        dict(config), float(t), info, wall_s=trial.wall_s,
                         error=f"TrialTimeout: wall {trial.wall_s:.1f}s > "
-                              f"{self.timeout_s}s (soft)",
+                              f"{self.timeout_s}s (soft; measurement kept)",
                         status="timeout",
                     )
                 self._persist(trial)
@@ -310,30 +368,80 @@ class TrialScheduler:
         deadline becomes an infeasible trial. The batch returns promptly
         regardless: queued futures are cancelled and a hung worker thread is
         abandoned, not joined (threads can't be killed — it still holds until
-        interpreter exit; process-level isolation is a ROADMAP item)."""
+        interpreter exit; ``isolation="subprocess"`` kills for real).
+
+        Deadline semantics: every trial gets ``timeout_s`` from the moment
+        its thread actually *starts* — not from the previous ``result()``
+        call (the old cumulative bug: N stragglers serialized into N×timeout
+        wall clock), and not from batch start (which would falsely time out
+        trials queued behind a full pool). A trial still queued once every
+        pool slot has had a full timeout window (``timeout_s × ceil(N/W)``
+        from batch start) is stuck behind hung threads and is cancelled. A
+        started-then-abandoned thread that eventually completes has
+        ``wall_s > timeout_s`` by construction, so its late ``_run_one``
+        persist is the same measured-timeout record — never a conflicting
+        ok record."""
         out: List[Tuple[str, Trial]] = []
         pool = ThreadPoolExecutor(max_workers=self.max_workers)
+        starts: Dict[int, float] = {}  # future index -> monotonic start
+
+        def timed(i: int, c: Dict[str, Any]) -> Trial:
+            starts[i] = time.monotonic()
+            return self._run_one(c)
+
+        batch_cap = (
+            None if self.timeout_s is None
+            else time.monotonic()
+            + self.timeout_s * math.ceil(len(plan) / self.max_workers)
+        )
         try:
-            futures = [(k, c, pool.submit(self._run_one, c)) for k, c in plan]
-            for k, c, fut in futures:
-                try:
-                    trial = fut.result(timeout=self.timeout_s)
-                except FutureTimeoutError:
-                    fut.cancel()  # no-op if running; frees the slot if queued
-                    trial = Trial(
-                        dict(c), self.infeasible_time, {}, wall_s=self.timeout_s,
-                        error=f"TrialTimeout: no result within {self.timeout_s}s "
-                              "(worker thread abandoned)",
-                        status="timeout",
-                    )
-                except CancelledError:
-                    trial = Trial(
-                        dict(c), self.infeasible_time, {},
-                        wall_s=0.0,
-                        error="TrialTimeout: cancelled before start "
-                              f"(batch deadline {self.timeout_s}s)",
-                        status="timeout",
-                    )
+            futures = [
+                (i, k, c, pool.submit(timed, i, c))
+                for i, (k, c) in enumerate(plan)
+            ]
+            for i, k, c, fut in futures:
+                trial: Optional[Trial] = None
+                while trial is None:
+                    if self.timeout_s is None:
+                        trial = fut.result()
+                        break
+                    now = time.monotonic()
+                    t_start = starts.get(i)
+                    if t_start is None:
+                        if now >= batch_cap and fut.cancel():
+                            trial = Trial(
+                                dict(c), self.infeasible_time, {}, wall_s=0.0,
+                                error="TrialTimeout: cancelled before start "
+                                      "(batch cap exhausted by hung earlier "
+                                      "trials)",
+                                status="timeout",
+                            )
+                            break
+                        wait = min(0.05, max(0.0, batch_cap - now))
+                    else:
+                        deadline_i = t_start + self.timeout_s
+                        if now >= deadline_i:
+                            trial = Trial(
+                                dict(c), self.infeasible_time, {},
+                                wall_s=self.timeout_s,
+                                error="TrialTimeout: no result within "
+                                      f"{self.timeout_s}s of start "
+                                      "(worker thread abandoned)",
+                                status="timeout",
+                            )
+                            break
+                        wait = deadline_i - now
+                    try:
+                        trial = fut.result(timeout=wait)
+                    except FutureTimeoutError:
+                        continue  # re-evaluate start/deadline state
+                    except CancelledError:
+                        trial = Trial(
+                            dict(c), self.infeasible_time, {}, wall_s=0.0,
+                            error="TrialTimeout: cancelled before start "
+                                  f"(batch deadline {self.timeout_s}s)",
+                            status="timeout",
+                        )
                 out.append((k, trial))
         finally:
             # don't block on stragglers; drop whatever never started
@@ -343,7 +451,12 @@ class TrialScheduler:
     # ------------------------------------------------------------------- io
 
     def _persist(self, trial: Trial):
-        if not self.cache_path or not trial.ok:
+        # ok trials always persist; timeout trials persist only when they
+        # carry a real finite measurement (a SIGKILLed / abandoned trial has
+        # nothing worth replaying). Extra keys appear ONLY on non-ok records,
+        # keeping ok-record bytes identical to every cache written before.
+        measured_timeout = trial.timed_out and math.isfinite(trial.time_s)
+        if not self.cache_path or not (trial.ok or measured_timeout):
             return
         rec = {
             "key": config_hash(trial.config),
@@ -354,6 +467,10 @@ class TrialScheduler:
             "time_s": trial.time_s,
             "info": _scalar_info(trial.info),
         }
+        if not trial.ok:
+            rec["status"] = trial.status
+            rec["error"] = trial.error
+            rec["wall_s"] = trial.wall_s  # replay re-judges vs. the live deadline
         with self._log_lock:
             self._persistent[rec["key"]] = rec
             with self.cache_path.open("a") as f:
@@ -401,16 +518,31 @@ def _load_cache(path: Path, platform: str) -> Dict[str, Dict[str, Any]]:
     return out
 
 
-def read_log(path: Path) -> List[Dict[str, Any]]:
+def read_log(path: Path, platform: Optional[str] = None) -> List[Dict[str, Any]]:
     """Recover trials from a scheduler log file (the paper's 'analyzing the
-    log file helps in finding the optimal configuration')."""
+    log file helps in finding the optimal configuration').
+
+    Tolerates a torn tail line from a crashed session (like ``_load_cache``)
+    and, given ``platform``, filters a shared multi-cell log down to one
+    cell's records (legacy records without a platform field are kept)."""
     out = []
     for line in Path(path).read_text().splitlines():
-        if line.strip():
-            out.append(json.loads(line))
+        if not line.strip():
+            continue
+        try:
+            rec = json.loads(line)
+        except json.JSONDecodeError:
+            continue  # torn tail write from a crashed session
+        if platform is not None and rec.get("platform", platform) != platform:
+            continue
+        out.append(rec)
     return out
 
 
-def best_from_log(path: Path) -> Dict[str, Any]:
-    recs = [r for r in read_log(path) if r.get("error") is None]
+def best_from_log(path: Path, platform: Optional[str] = None) -> Dict[str, Any]:
+    recs = [r for r in read_log(path, platform=platform)
+            if r.get("error") is None]
+    if not recs:
+        where = f"{path}" + (f" (platform={platform!r})" if platform else "")
+        raise ValueError(f"no successful trials in log {where}")
     return min(recs, key=lambda r: r["time_s"])

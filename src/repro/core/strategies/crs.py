@@ -85,14 +85,16 @@ class CRSStrategy(QueueStrategy):
     # -- QueueStrategy hooks
 
     def _observe(self, trial: Trial) -> None:
-        self._round_results.append((dict(trial.config), trial.time_s))
+        # rank on Trial.score, not time_s: a timeout trial carries its real
+        # measurement but must never survive a round or become the best
+        self._round_results.append((dict(trial.config), trial.score))
         # running best per trial (not per round): identical to the legacy
         # survivors-based best for completed runs — every round's survivor[0]
         # is that round's first-drawn minimum and the cross-round update is
         # strict — and it keeps result() meaningful on a mid-round early stop
-        if trial.time_s < self._best_time:
+        if trial.score < self._best_time:
             self._best_config = dict(trial.config)
-            self._best_time = trial.time_s
+            self._best_time = trial.score
 
     def _on_batch_done(self) -> None:
         self._round_results.sort(key=lambda ct: ct[1])  # stable: draw order ties

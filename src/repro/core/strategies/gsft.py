@@ -75,8 +75,10 @@ class GridFinerStrategy(QueueStrategy):
     # -- QueueStrategy hooks
 
     def _observe(self, trial: Trial) -> None:
-        if trial.time_s < self._min_time:
-            self._min_time = trial.time_s
+        # Trial.score is infeasible for errored/timed-out trials — a timeout
+        # Trial's real measured time_s must not win a grid cell
+        if trial.score < self._min_time:
+            self._min_time = trial.score
             self._best_config = dict(trial.config)
 
     def _on_batch_done(self) -> None:

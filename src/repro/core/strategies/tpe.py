@@ -241,7 +241,10 @@ class TPEStrategy(QueueStrategy):
     def _observe(self, trial: Trial) -> None:
         full = self._canon(trial.config)
         if full is not None:
-            self._record(full, trial.time_s)
+            # Trial.score: non-ok trials (errors, over-deadline measurements)
+            # enter the model as infeasible, same as before timeouts kept
+            # their real time_s
+            self._record(full, trial.score)
 
     def _on_batch_done(self) -> None:
         self._refill()

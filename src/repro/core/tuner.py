@@ -70,15 +70,37 @@ def tune(
     patience: Optional[int] = None,
     timeout_s: Optional[float] = None,
     retries: int = 0,
+    isolation: str = "inline",
     scheduler: Optional[TrialScheduler] = None,
     **algo_kwargs,
 ) -> TuneOutcome:
     """Run one tuning session (the Admin's 'select algorithm × platform').
 
     Pass ``scheduler`` to share one engine (and its memo + persistent cache)
-    across several sessions — the multi-cell driver does."""
+    across several sessions — the multi-cell driver does. Engine knobs and
+    ``scheduler`` are mutually exclusive: a conflicting combination raises
+    instead of silently ignoring the knobs."""
     space = space or SPACES[platform]
-    if scheduler is None:
+    if scheduler is not None:
+        ignored = [
+            name for name, off_default in (
+                ("max_workers", max_workers != 1),
+                ("timeout_s", timeout_s is not None),
+                ("retries", retries != 0),
+                ("cache_path", cache_path is not None),
+                ("isolation", isolation != "inline"),
+                ("log_path", log_path is not None),
+                ("clear_caches_between_trials", clear_caches_between_trials),
+            ) if off_default
+        ]
+        if ignored:
+            raise ValueError(
+                f"tune(): {', '.join(ignored)} would be silently ignored when "
+                "an explicit scheduler is passed — configure them on the "
+                "TrialScheduler instead"
+            )
+    created_scheduler = scheduler is None
+    if created_scheduler:
         scheduler = TrialScheduler(
             evaluator,
             platform=platform,
@@ -88,6 +110,7 @@ def tune(
             cache_path=cache_path,
             timeout_s=timeout_s,
             retries=retries,
+            isolation=isolation,
         )
 
     if algorithm not in STRATEGIES:
@@ -103,27 +126,35 @@ def tune(
     ):
         algo_kwargs["history"] = scheduler.cached_observations()
 
-    defaults = {**space.defaults(), **(fixed or {})}
-    default_time = scheduler.evaluate(defaults, tag="default")
+    # per-run accounting: deltas against the scheduler's lifetime counters,
+    # so a shared multi-cell scheduler doesn't inflate every cell's report
+    evals_before = scheduler.num_evaluations
+    timeouts_before = scheduler.timeout_trials
+    try:
+        defaults = {**space.defaults(), **(fixed or {})}
+        default_time = scheduler.evaluate(defaults, tag="default")
 
-    if algorithm in ("gsft", "grid"):
-        algo_kwargs.setdefault("active_params", active_params)
-    strategy = make_strategy(algorithm, space, fixed=fixed, **algo_kwargs)
-    result = scheduler.run(strategy, batch_size=batch_size, patience=patience)
-    best_config, best_time = result.best_config, result.best_time
+        if algorithm in ("gsft", "grid"):
+            algo_kwargs.setdefault("active_params", active_params)
+        strategy = make_strategy(algorithm, space, fixed=fixed, **algo_kwargs)
+        result = scheduler.run(strategy, batch_size=batch_size, patience=patience)
+        best_config, best_time = result.best_config, result.best_time
 
-    # defaults themselves might be the optimum; the log keeps everything
-    if default_time < best_time:
-        best_config, best_time = defaults, default_time
+        # defaults themselves might be the optimum; the log keeps everything
+        if default_time < best_time:
+            best_config, best_time = defaults, default_time
 
-    return TuneOutcome(
-        platform=platform,
-        algorithm=algorithm,
-        default_time=default_time,
-        best_time=best_time,
-        best_config=best_config,
-        evaluations=scheduler.num_evaluations,
-        detail=result,
-        cache_stats=scheduler.cache_stats(),
-        timeouts=scheduler.timeout_trials,
-    )
+        return TuneOutcome(
+            platform=platform,
+            algorithm=algorithm,
+            default_time=default_time,
+            best_time=best_time,
+            best_config=best_config,
+            evaluations=scheduler.num_evaluations - evals_before,
+            detail=result,
+            cache_stats=scheduler.cache_stats(),
+            timeouts=scheduler.timeout_trials - timeouts_before,
+        )
+    finally:
+        if created_scheduler:
+            scheduler.close()  # reap warm subprocess workers; inline: no-op

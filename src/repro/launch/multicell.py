@@ -41,6 +41,9 @@ def tune_cells(
     log_dir: Path = None,
     patience: int = None,
     batch_size: int = None,
+    isolation: str = "inline",
+    jobs: int = 1,
+    trial_timeout: float = None,
     **algo_kwargs,
 ):
     """Tune each ``arch:shape`` cell; returns {cell: TuneOutcome}. One shared
@@ -77,6 +80,9 @@ def tune_cells(
             patience=patience,
             batch_size=batch_size,
             clear_caches_between_trials=True,
+            isolation=isolation,
+            max_workers=jobs,
+            timeout_s=trial_timeout,
             **algo_kwargs,
         )
         outcomes[cell] = outcome
@@ -104,6 +110,15 @@ def main(argv=None):
     ap.add_argument("--out", type=Path, default=Path("results/multicell/summary.json"))
     ap.add_argument("--patience", type=int, default=None)
     ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--jobs", type=int, default=1,
+                    help="parallel trials per batch")
+    ap.add_argument("--trial-timeout", "--timeout", dest="trial_timeout",
+                    type=float, default=None,
+                    help="per-trial timeout in seconds (hard SIGKILL under "
+                         "--isolation subprocess)")
+    ap.add_argument("--isolation", default="inline",
+                    choices=["inline", "subprocess"],
+                    help="trial execution backend (see launch/tune.py)")
     args = ap.parse_args(argv)
 
     if args.algorithm == "gsft":
@@ -120,6 +135,9 @@ def main(argv=None):
         log_dir=args.log_dir,
         patience=args.patience,
         batch_size=args.batch,
+        isolation=args.isolation,
+        jobs=args.jobs,
+        trial_timeout=args.trial_timeout,
         **algo_kwargs,
     )
     args.out.parent.mkdir(parents=True, exist_ok=True)

@@ -47,10 +47,17 @@ def add_engine_args(ap: argparse.ArgumentParser):
                     help="persistent JSONL evaluation cache shared across runs")
     ap.add_argument("--patience", type=int, default=None,
                     help="stop when best hasn't improved in N batches")
-    ap.add_argument("--trial-timeout", type=float, default=None,
-                    help="per-trial timeout in seconds (timeout => infeasible)")
+    ap.add_argument("--trial-timeout", "--timeout", dest="trial_timeout",
+                    type=float, default=None,
+                    help="per-trial timeout in seconds (timeout => infeasible; "
+                         "hard SIGKILL under --isolation subprocess)")
     ap.add_argument("--retries", type=int, default=0,
                     help="per-trial retries before recording a failure")
+    ap.add_argument("--isolation", default="inline",
+                    choices=["inline", "subprocess"],
+                    help="trial execution backend: inline threads (soft "
+                         "timeouts) or worker processes (hard deadlines, "
+                         "crash containment, warm reuse)")
 
 
 def engine_kwargs(args) -> dict:
@@ -61,6 +68,7 @@ def engine_kwargs(args) -> dict:
         patience=args.patience,
         timeout_s=args.trial_timeout,
         retries=args.retries,
+        isolation=args.isolation,
     )
 
 

@@ -31,26 +31,44 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="defaults + roofline only")
     ap.add_argument("--skip-lm", action="store_true", help="wordcount platform only")
-    ap.add_argument("--jobs", type=int, default=1,
-                    help="parallel trials per batch (TrialScheduler thread pool)")
+    ap.add_argument("--jobs", type=int, default=None,
+                    help="parallel trials per batch (TrialScheduler thread "
+                         "pool; default 1)")
+    ap.add_argument("--study", type=Path, default=None,
+                    help="Study directory — every table run shares its "
+                         "persistent evaluation cache (created on first use)")
     ap.add_argument("--cache", type=Path, default=None,
-                    help="persistent JSONL evaluation cache — a warm re-run "
-                         "of the search tables performs no fresh evaluations")
+                    help="legacy persistent JSONL evaluation cache — a warm "
+                         "re-run of the search tables performs no fresh "
+                         "evaluations (ignored when --study is given)")
     ap.add_argument("--strategy", default="all",
                     choices=["all", "gsft", "crs", "tpe"],
                     help="which search strategy's tables to run (default all, "
                          "incl. the GSFT-vs-CRS-vs-TPE shootout)")
-    ap.add_argument("--isolation", default="inline",
+    ap.add_argument("--isolation", default=None,
                     choices=["inline", "subprocess"],
                     help="trial execution backend for every table run: "
-                         "inline threads or hard-deadline worker processes")
+                         "inline threads (the default) or hard-deadline "
+                         "worker processes")
     ap.add_argument("--trial-timeout", "--timeout", dest="trial_timeout",
                     type=float, default=None,
                     help="per-trial timeout in seconds (hard SIGKILL under "
                          "--isolation subprocess)")
     args = ap.parse_args(argv)
-    tables.ENGINE.update(max_workers=args.jobs, cache_path=args.cache,
-                         isolation=args.isolation, timeout_s=args.trial_timeout)
+    # one validated EngineConfig instead of loose kwargs; --study routes every
+    # table's trials into the study's shared cache. Explicitly-typed flags
+    # overlay the stored engine per-field; untyped flags don't clobber it.
+    from repro.launch.tune import engine_config, engine_overrides, \
+        open_persistent_study
+
+    engine = engine_config(args)
+    cache = args.cache
+    if args.study:
+        study = open_persistent_study(args.study, engine_overrides(args))
+        cache, engine = study.cache_path, study.engine
+    # every TrialScheduler-level knob of the engine flows through (patience/
+    # batch_size are per-run knobs the table functions own themselves)
+    tables.ENGINE.update(cache_path=cache, **engine.scheduler_kwargs())
 
     t0 = time.time()
     all_rows = []

@@ -9,7 +9,8 @@
   - ``strategies`` — ask/tell Strategy engine: gsft, crs, hillclimb, tpe
   - ``grid_finer`` — Algorithm I wrapper: Grid Search with Finer Tuning (§VIII)
   - ``crs``        — Algorithm II wrapper: Controlled Random Search (§IX)
-  - ``tuner``      — the Admin facade (Figure I)
+  - ``study``      — Study: persistent, resumable tuning sessions + EngineConfig
+  - ``tuner``      — the Admin facade (Figure I) — deprecated shim over Study
   - ``evaluators`` — walltime (paper-faithful) / roofline (AOT) backends
   - ``roofline``   — TPU v5e roofline terms from compiled artifacts
   - ``hlo``        — collective-traffic parser over partitioned HLO
@@ -38,10 +39,15 @@ from repro.core.strategies import (
     make_strategy,
     register_strategy,
 )
-from repro.core.tuner import TuneOutcome, tune
+from repro.core.study import EngineConfig, Study, StudyCell, TuneOutcome, run_session
+from repro.core.tuner import tune
 
 __all__ = [
     "CMPE",
+    "EngineConfig",
+    "Study",
+    "StudyCell",
+    "run_session",
     "CRSResult",
     "CRSStrategy",
     "CuratedHillclimbStrategy",

@@ -314,6 +314,15 @@ class TrialScheduler:
             "errors": self.error_trials,
         }
 
+    def stats_snapshot(self) -> Dict[str, int]:
+        """Point-in-time counters for per-session delta accounting: a Study
+        (or the tune shim) subtracts two snapshots so a shared multi-session
+        scheduler reports each session's own numbers, never lifetime totals.
+        Same counters as :meth:`run_stats` under the outcome-facing name."""
+        stats = self.run_stats()
+        stats["evaluations"] = stats.pop("trials")
+        return stats
+
     def cached_observations(self) -> List[Tuple[Dict[str, Any], float, Any]]:
         """``(config, time_s, tag)`` triples from the persistent cache, this
         platform only, in file order — the warm-start history a model-based
@@ -500,22 +509,31 @@ def _scalar_info(info: Dict[str, Any]) -> Dict[str, Any]:
     return {k: v for k, v in info.items() if isinstance(v, (int, float, str, bool))}
 
 
-def _load_cache(path: Path, platform: str) -> Dict[str, Dict[str, Any]]:
-    """Load a JSONL evaluation cache (last record per key wins). Records are
-    namespaced by platform so one shared file serves a multi-cell session."""
-    out: Dict[str, Dict[str, Any]] = {}
+def iter_jsonl(path: Path) -> List[Dict[str, Any]]:
+    """Parse a JSONL records file, tolerating the torn tail line a crashed
+    session can leave behind — the one parser under the eval cache, the trial
+    log, and the Study accessors."""
+    out: List[Dict[str, Any]] = []
+    path = Path(path)
     if not path.exists():
         return out
     for line in path.read_text().splitlines():
         if not line.strip():
             continue
         try:
-            rec = json.loads(line)
+            out.append(json.loads(line))
         except json.JSONDecodeError:
             continue  # torn tail write from a crashed session
-        if rec.get("platform", platform) == platform and "key" in rec:
-            out[rec["key"]] = rec
     return out
+
+
+def _load_cache(path: Path, platform: str) -> Dict[str, Dict[str, Any]]:
+    """Load a JSONL evaluation cache (last record per key wins). Records are
+    namespaced by platform so one shared file serves a multi-cell session."""
+    return {
+        rec["key"]: rec for rec in iter_jsonl(path)
+        if rec.get("platform", platform) == platform and "key" in rec
+    }
 
 
 def read_log(path: Path, platform: Optional[str] = None) -> List[Dict[str, Any]]:
@@ -524,19 +542,15 @@ def read_log(path: Path, platform: Optional[str] = None) -> List[Dict[str, Any]]
 
     Tolerates a torn tail line from a crashed session (like ``_load_cache``)
     and, given ``platform``, filters a shared multi-cell log down to one
-    cell's records (legacy records without a platform field are kept)."""
-    out = []
-    for line in Path(path).read_text().splitlines():
-        if not line.strip():
-            continue
-        try:
-            rec = json.loads(line)
-        except json.JSONDecodeError:
-            continue  # torn tail write from a crashed session
-        if platform is not None and rec.get("platform", platform) != platform:
-            continue
-        out.append(rec)
-    return out
+    cell's records (legacy records without a platform field are kept). A
+    missing file raises (a typo'd path must not read as an empty log)."""
+    path = Path(path)
+    if not path.exists():
+        raise FileNotFoundError(f"no trial log at {path}")
+    return [
+        rec for rec in iter_jsonl(path)
+        if platform is None or rec.get("platform", platform) == platform
+    ]
 
 
 def best_from_log(path: Path, platform: Optional[str] = None) -> Dict[str, Any]:

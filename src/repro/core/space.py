@@ -117,13 +117,23 @@ class FloatParam(Param):
         return True
 
     def snap(self, value) -> float:
-        return float(max(self.lo, min(self.hi, value)))
+        """Clamp into bounds AND quantize to the ``step`` grid anchored at
+        ``lo`` (matching ``IntParam.snap`` — the paper samples continuous
+        parameters 'with a predefined step', so CRS/TPE proposals must land
+        on the same grid the sweeps walk). A quantum that rounds past ``hi``
+        clamps back to ``hi``."""
+        v = float(max(self.lo, min(self.hi, value)))
+        if self.step > 0:
+            v = self.lo + round((v - self.lo) / self.step) * self.step
+            v = float(max(self.lo, min(self.hi, v)))
+        return v
 
     def grid(self, num: int) -> List[float]:
         if num <= 1:
             return [self.default]
         step = (self.hi - self.lo) / (num - 1)
-        return [self.snap(self.lo + i * step) for i in range(num)]
+        # step-quantized snapping can collapse neighbours — dedupe like IntParam
+        return sorted({self.snap(self.lo + i * step) for i in range(num)})
 
     def grid_between(self, lo: float, hi: float, step: float) -> List[float]:
         out, v, guard = [], lo, 0

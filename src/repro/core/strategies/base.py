@@ -45,11 +45,27 @@ class QueueStrategy:
     phase machine once every asked config has been told back."""
 
     tag = "strategy"
+    # model-based strategies set True to receive the study's cached
+    # observation history (via on_study_attach, or a legacy ``history``
+    # constructor kwarg if the hook is not overridden)
+    supports_history = False
+    # name of the constructor kwarg that Study.optimize(budget=N) maps onto
+    # (e.g. TPE's "max_trials"); None = the strategy has no trial budget
+    budget_kwarg: Optional[str] = None
 
     def __init__(self):
         self._pending: List[Dict[str, Any]] = []
         self._outstanding = 0
         self._finished = False
+
+    def on_study_attach(self, history: Sequence[Any]) -> None:
+        """Sanctioned seam for study/cross-session state: ``history`` is the
+        prior ``(config, time_s[, tag])`` observations from the study's
+        persistent cache (this platform only, file order). Called once,
+        after construction and before the first ``ask`` — a warm-starting
+        strategy (TPE) or a cross-cell transfer prior ingests it here
+        instead of reaching into scheduler internals. Default: ignore."""
+        return None
 
     @property
     def done(self) -> bool:

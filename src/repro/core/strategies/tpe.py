@@ -159,7 +159,8 @@ class TPEStrategy(QueueStrategy):
                      of (seed, told results), independent of batch size
     """
 
-    supports_history = True  # tuner feeds the persistent eval cache in
+    supports_history = True  # Study/tuner feed the persistent eval cache in
+    budget_kwarg = "max_trials"  # Study.optimize(budget=N) maps here
 
     def __init__(
         self,
@@ -185,6 +186,7 @@ class TPEStrategy(QueueStrategy):
         self.n_candidates = max(1, int(n_candidates))
         self.round_size = max(1, int(round_size))
         self.prior_weight = float(prior_weight)
+        self._seed = seed
         self.rng = random.Random(seed)
         self.n_startup = int(n_startup) if n_startup is not None else min(
             10, max(4, self.max_trials // 4)
@@ -196,6 +198,23 @@ class TPEStrategy(QueueStrategy):
         self._best_config: Optional[Dict[str, Any]] = None
         self._best_time = float("inf")
         self._rounds = 0
+        self.warm_started = 0
+
+        self.tag = "tpe/startup"
+        self.on_study_attach(history or ())
+
+    def on_study_attach(self, history) -> None:
+        """Warm-start seam (the Strategy protocol's study hook): ingest prior
+        ``(config, time_s[, tag])`` observations, then recompute the pending
+        proposals — the proposal stream is a pure function of
+        ``(seed, observations)``, so attaching history after construction is
+        byte-identical to passing it to the constructor. Must run before the
+        first ``ask``."""
+        if self._outstanding:
+            raise RuntimeError(
+                "on_study_attach must be called before trials are in flight"
+            )
+        import random
 
         for entry in history or ():
             cfg, t = entry[0], float(entry[1])
@@ -209,8 +228,9 @@ class TPEStrategy(QueueStrategy):
             charged = tag is None or str(tag).startswith("tpe")
             self._record(full, t, charged=charged)
         self.warm_started = len(self._observations)
-
-        self.tag = "tpe/startup"
+        self.rng = random.Random(self._seed)
+        self._finished = False
+        self._pending = []
         self._refill()
 
     # ------------------------------------------------------------ bookkeeping

@@ -1,0 +1,948 @@
+"""Study — the persistent, resumable tuning-session object (the user-facing
+API every driver now goes through).
+
+The paper's Admin workflow is "pick a platform × algorithm, run, read the
+reduction". A :class:`Study` is that workflow made durable: it owns one
+storage directory (trial log, persistent evaluation cache, session manifest
+with space/platform/seed provenance) and accepts any number of heterogeneous
+sessions against it:
+
+    study = Study.create("results/studies/wc")
+    study.optimize("wordcount", "gsft", evaluator)       # session 1
+    study.optimize("wordcount", "tpe", evaluator,        # session 2 —
+                   budget=48)                            #   warm-started free
+    study.report()                                       # the reduction table
+
+Because every session shares the study's evaluation cache, a later session
+replays earlier measurements for nothing, a model-based strategy (TPE) seeds
+its observation history from them through the sanctioned
+``Strategy.on_study_attach(history)`` seam, and an interrupted session is
+re-entered with :meth:`Study.resume` paying only the unpaid remainder of its
+budget.
+
+Engine knobs (parallel workers, isolation backend, per-trial timeout,
+retries, patience, batch size) live on one validated :class:`EngineConfig`
+instead of a kwarg forest; ``repro.core.tuner.tune`` remains as a thin
+deprecated shim over a throwaway in-memory Study.
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+import json
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Sequence
+
+from repro.core.scheduler import TrialScheduler, iter_jsonl, read_log
+from repro.core.space import SPACES, TunableSpace
+from repro.core.strategies import STRATEGIES, make_strategy
+from repro.core.strategies.base import QueueStrategy
+
+__all__ = ["EngineConfig", "Study", "StudyCell", "TuneOutcome", "run_session"]
+
+_ISOLATIONS = ("inline", "subprocess")
+
+
+# ------------------------------------------------------------- engine config
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """Every TrialScheduler/driver knob, validated in one place.
+
+    ``workers``     parallel trials per batch (thread pool / worker processes)
+    ``isolation``   ``"inline"`` (threads, soft timeouts) or ``"subprocess"``
+                    (worker processes, hard SIGKILL deadlines)
+    ``timeout_s``   per-trial deadline; None = unlimited
+    ``retries``     per-trial retries before recording a failure
+    ``patience``    stop a session when the best hasn't improved in N batches
+    ``batch_size``  max configs per ask() batch (None = whole phase)
+    ``clear_caches`` clear jit caches before every fresh trial (serial path)
+    """
+
+    workers: int = 1
+    isolation: str = "inline"
+    timeout_s: Optional[float] = None
+    retries: int = 0
+    patience: Optional[int] = None
+    batch_size: Optional[int] = None
+    clear_caches: bool = False
+
+    def __post_init__(self):
+        if int(self.workers) < 1:
+            raise ValueError(f"EngineConfig.workers must be >= 1, got {self.workers}")
+        if self.isolation not in _ISOLATIONS:
+            raise ValueError(
+                f"EngineConfig.isolation must be one of {_ISOLATIONS}, "
+                f"got {self.isolation!r}"
+            )
+        if self.timeout_s is not None and not self.timeout_s > 0:
+            raise ValueError(
+                f"EngineConfig.timeout_s must be positive or None, got {self.timeout_s}"
+            )
+        if int(self.retries) < 0:
+            raise ValueError(f"EngineConfig.retries must be >= 0, got {self.retries}")
+        if self.patience is not None and int(self.patience) < 1:
+            raise ValueError(
+                f"EngineConfig.patience must be >= 1 or None, got {self.patience}"
+            )
+        if self.batch_size is not None and int(self.batch_size) < 1:
+            raise ValueError(
+                f"EngineConfig.batch_size must be >= 1 or None, got {self.batch_size}"
+            )
+
+    def scheduler_kwargs(self) -> Dict[str, Any]:
+        """Kwargs for :class:`TrialScheduler` (and the ``tune`` shim)."""
+        return dict(
+            max_workers=self.workers,
+            timeout_s=self.timeout_s,
+            retries=self.retries,
+            isolation=self.isolation,
+            clear_caches_between_trials=self.clear_caches,
+        )
+
+    def run_kwargs(self) -> Dict[str, Any]:
+        """Kwargs for :meth:`TrialScheduler.run`."""
+        return dict(batch_size=self.batch_size, patience=self.patience)
+
+    def replace(self, **changes: Any) -> "EngineConfig":
+        return dataclasses.replace(self, **changes)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "EngineConfig":
+        names = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in (d or {}).items() if k in names})
+
+
+# ------------------------------------------------------------- tune outcome
+
+
+@dataclass
+class TuneOutcome:
+    platform: str
+    algorithm: str
+    default_time: float
+    best_time: float
+    best_config: Dict[str, Any]
+    evaluations: int
+    detail: Any = None
+    # per-SESSION deltas (not scheduler-lifetime totals): a shared multi-cell
+    # or multi-session scheduler must not inflate every report
+    cache_stats: Optional[Dict[str, int]] = None
+    timeouts: int = 0  # trials that hit the (soft) per-trial deadline
+
+    @property
+    def reduction_pct(self) -> float:
+        """The paper's headline metric: % reduction in execution time vs. the
+        all-defaults configuration."""
+        if self.default_time in (0.0, float("inf")):
+            return 0.0
+        return 100.0 * (self.default_time - self.best_time) / self.default_time
+
+    def summary(self) -> Dict[str, Any]:
+        out = {
+            "platform": self.platform,
+            "algorithm": self.algorithm,
+            "default_time_s": self.default_time,
+            "best_time_s": self.best_time,
+            "reduction_pct": round(self.reduction_pct, 2),
+            "evaluations": self.evaluations,
+            "timeouts": self.timeouts,
+            "best_config": self.best_config,
+        }
+        if self.cache_stats:
+            out["cache_stats"] = self.cache_stats
+        return out
+
+
+# ------------------------------------------------------------ session engine
+
+
+def run_session(
+    scheduler: TrialScheduler,
+    platform: str,
+    algorithm: str,
+    space: TunableSpace,
+    *,
+    fixed: Optional[Dict[str, Any]] = None,
+    active_params: Optional[Sequence[str]] = None,
+    batch_size: Optional[int] = None,
+    patience: Optional[int] = None,
+    **algo_kwargs,
+) -> TuneOutcome:
+    """One tuning session on an already-configured scheduler: measure the
+    defaults, drive the strategy, report per-session deltas.
+
+    This is the engine path under :meth:`Study.optimize` and the
+    ``tuner.tune`` shim; share one scheduler across calls to share its memo
+    and persistent cache (the multi-cell driver does).
+    """
+    factory = _factory_for(algorithm)
+    # warm-start a model-based strategy from the persistent eval cache
+    # *before* the defaults trial lands in it: a re-run over a complete cache
+    # resumes with its full observation history and proposes nothing fresh
+    attach_history = (
+        getattr(factory, "supports_history", False)
+        and "history" not in algo_kwargs
+    )
+    history = scheduler.cached_observations() if attach_history else None
+    # strategies that override the on_study_attach seam receive history
+    # there; legacy supports_history strategies — including protocol-only
+    # classes with no hook attribute at all — still get the constructor kwarg
+    hook = getattr(factory, "on_study_attach", None)
+    uses_hook = hook is not None and hook is not QueueStrategy.on_study_attach
+    if attach_history and not uses_hook:
+        algo_kwargs["history"] = history
+
+    before = scheduler.stats_snapshot()
+    defaults = {**space.defaults(), **(fixed or {})}
+    default_time = scheduler.evaluate(defaults, tag="default")
+
+    if algorithm in ("gsft", "grid"):
+        algo_kwargs.setdefault("active_params", active_params)
+    strategy = make_strategy(algorithm, space, fixed=fixed, **algo_kwargs)
+    if attach_history and uses_hook:
+        strategy.on_study_attach(history)
+    result = scheduler.run(strategy, batch_size=batch_size, patience=patience)
+    best_config, best_time = result.best_config, result.best_time
+
+    # defaults themselves might be the optimum; the log keeps everything
+    if default_time < best_time:
+        best_config, best_time = defaults, default_time
+
+    after = scheduler.stats_snapshot()
+    return TuneOutcome(
+        platform=platform,
+        algorithm=algorithm,
+        default_time=default_time,
+        best_time=best_time,
+        best_config=best_config,
+        evaluations=after["evaluations"] - before["evaluations"],
+        detail=result,
+        cache_stats={
+            k: after[k] - before[k] for k in ("fresh", "memo_hits", "cache_hits")
+        },
+        timeouts=after["timeouts"] - before["timeouts"],
+    )
+
+
+# ------------------------------------------------------------------- helpers
+
+
+def _factory_for(algorithm: str):
+    try:
+        return STRATEGIES[algorithm]
+    except KeyError:
+        raise ValueError(
+            f"unknown algorithm {algorithm!r} (use one of {sorted(STRATEGIES)})"
+        ) from None
+
+
+def _space_for(name: str) -> TunableSpace:
+    """Resolve a platform name to its shipped space. Cell platforms are
+    namespaced ``train/arch:shape`` — the prefix names the space."""
+    base = name.split("/", 1)[0]
+    if base in SPACES:
+        return SPACES[base]
+    if base == "wordcount":
+        from repro.apps.wordcount import WORDCOUNT_SPACE
+
+        return WORDCOUNT_SPACE
+    raise ValueError(
+        f"no shipped space for platform {name!r} — pass space= explicitly"
+    )
+
+
+def _accepts_kwarg(factory: Any, name: str) -> bool:
+    try:
+        sig = inspect.signature(factory)
+    except (TypeError, ValueError):  # builtins / exotic callables: assume yes
+        return True
+    params = sig.parameters.values()
+    if any(p.kind is p.VAR_KEYWORD for p in params):
+        return True
+    return name in sig.parameters
+
+
+_MISSING = object()  # serialization-failure sentinel — None is a legal value
+
+
+def _jsonable(obj: Any) -> Any:
+    """``obj`` if it round-trips through JSON, else ``_MISSING`` (NOT None:
+    a legitimately-None kwarg must not read as a serialization failure)."""
+    try:
+        json.dumps(obj)
+        return obj
+    except (TypeError, ValueError):
+        return _MISSING
+
+
+def _spec_ref(evaluator: Any) -> Optional[Dict[str, Any]]:
+    """JSON-able recipe for rebuilding an evaluator on resume — only when it
+    carries a dotted-path :class:`~repro.core.executors.EvaluatorSpec` with
+    JSON-able arguments (a pickled instance or numpy payload does not
+    round-trip through the session manifest)."""
+    spec = getattr(evaluator, "spec", None)
+    if spec is None or not isinstance(getattr(spec, "target", None), str):
+        return None
+    ref = {
+        "target": spec.target,
+        "args": list(spec.args),
+        "kwargs": dict(spec.kwargs),
+        "construct": bool(spec.construct),
+    }
+    return ref if _jsonable(ref) is not _MISSING else None
+
+
+# ---------------------------------------------------------------------- study
+
+
+class Study:
+    """A persistent, resumable collection of tuning sessions over one storage
+    directory (``Study.create`` / ``Study.load`` / ``Study.open``), or an
+    ephemeral in-memory session holder (``Study()`` — what the deprecated
+    ``tune()`` shim uses).
+
+    Storage layout under ``path``:
+
+      - ``study.json``     manifest: version, creation time, seed, engine
+      - ``cache.jsonl``    persistent evaluation cache (platform-namespaced)
+      - ``trials.jsonl``   every trial of every session (the paper's log)
+      - ``sessions.jsonl`` session provenance: start/done records
+    """
+
+    MANIFEST = "study.json"
+    VERSION = 1
+
+    def __init__(
+        self,
+        path: Optional[Path] = None,
+        *,
+        engine: Optional[EngineConfig] = None,
+        seed: int = 0,
+        cache_path: Optional[Path] = None,
+        log_path: Optional[Path] = None,
+    ):
+        self.path = Path(path) if path else None
+        self.engine = engine or EngineConfig()
+        self.seed = int(seed)
+        if self.path is not None:
+            self.path.mkdir(parents=True, exist_ok=True)
+            self.cache_path: Optional[Path] = self.path / "cache.jsonl"
+            self.log_path: Optional[Path] = self.path / "trials.jsonl"
+            self._sessions_path: Optional[Path] = self.path / "sessions.jsonl"
+        else:  # in-memory study, optionally with explicit storage files
+            self.cache_path = Path(cache_path) if cache_path else None
+            self.log_path = Path(log_path) if log_path else None
+            self._sessions_path = None
+        self._sessions: List[Dict[str, Any]] = self._load_sessions()
+        self._outcomes: List[TuneOutcome] = []
+        self._cells: Dict[str, "StudyCell"] = {}
+        self._open_schedulers: List[TrialScheduler] = []
+
+    # ------------------------------------------------------------ lifecycle
+
+    @classmethod
+    def create(
+        cls,
+        path: Path,
+        *,
+        engine: Optional[EngineConfig] = None,
+        seed: int = 0,
+    ) -> "Study":
+        """Create a new study directory (manifest + empty storage). Refuses
+        to clobber an existing study — use :meth:`load` or :meth:`open`."""
+        path = Path(path)
+        manifest = path / cls.MANIFEST
+        if manifest.exists():
+            raise FileExistsError(
+                f"study already exists at {path} — use Study.load()/Study.open()"
+            )
+        study = cls(path, engine=engine, seed=seed)
+        manifest.write_text(json.dumps({
+            "version": cls.VERSION,
+            "created": time.time(),
+            "seed": study.seed,
+            "engine": study.engine.to_dict(),
+        }, indent=1))
+        return study
+
+    @classmethod
+    def load(cls, path: Path, *, engine: Optional[EngineConfig] = None) -> "Study":
+        """Load an existing study; ``engine`` overrides the stored defaults
+        for this process only (the manifest is not rewritten)."""
+        path = Path(path)
+        manifest = path / cls.MANIFEST
+        if not manifest.exists():
+            raise FileNotFoundError(
+                f"no study at {path} (missing {cls.MANIFEST}) — use Study.create()"
+            )
+        meta = json.loads(manifest.read_text())
+        return cls(
+            path,
+            engine=engine or EngineConfig.from_dict(meta.get("engine", {})),
+            seed=int(meta.get("seed", 0)),
+        )
+
+    @classmethod
+    def open(
+        cls,
+        path: Path,
+        *,
+        engine: Optional[EngineConfig] = None,
+        seed: int = 0,
+    ) -> "Study":
+        """Load the study at ``path`` if one exists, else create it — the
+        CLI's ``--study DIR`` semantics."""
+        if (Path(path) / cls.MANIFEST).exists():
+            return cls.load(path, engine=engine)
+        return cls.create(path, engine=engine, seed=seed)
+
+    def close(self) -> None:
+        """Release every scheduler the study holds open (cell schedulers and
+        their warm subprocess workers). Idempotent."""
+        for sched in self._open_schedulers:
+            sched.close()
+        self._open_schedulers = []
+        self._cells = {}
+
+    def __enter__(self) -> "Study":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ------------------------------------------------------------- sessions
+
+    def optimize(
+        self,
+        platform: str,
+        algorithm: str,
+        evaluator: Any,
+        *,
+        space: Optional[TunableSpace] = None,
+        budget: Optional[int] = None,
+        seed: Optional[int] = None,
+        fixed: Optional[Dict[str, Any]] = None,
+        active_params: Optional[Sequence[str]] = None,
+        engine: Optional[EngineConfig] = None,
+        **algo_kwargs,
+    ) -> TuneOutcome:
+        """Run one tuning session against the study's storage.
+
+        ``budget`` maps onto the strategy's trial-budget knob (strategies
+        declare it via ``budget_kwarg``, e.g. TPE's ``max_trials``); cached
+        history the strategy itself produced counts toward it, so repeating a
+        session over a complete cache proposes nothing fresh. ``seed``
+        defaults to the study seed for strategies that take one.
+        """
+        space = space or _space_for(platform)
+        eng = engine or self.engine
+        scheduler = self.scheduler(evaluator, platform=platform, engine=eng)
+        try:
+            return self._run_session(
+                scheduler, platform, algorithm, space, eng,
+                budget=budget, seed=seed, fixed=fixed,
+                active_params=active_params, evaluator=evaluator,
+                **algo_kwargs,
+            )
+        finally:
+            scheduler.close()
+
+    def _run_session(
+        self,
+        scheduler: TrialScheduler,
+        platform: str,
+        algorithm: str,
+        space: TunableSpace,
+        eng: EngineConfig,
+        *,
+        budget: Optional[int],
+        seed: Optional[int],
+        fixed: Optional[Dict[str, Any]],
+        active_params: Optional[Sequence[str]],
+        evaluator: Any,
+        resumes: Optional[int] = None,
+        **algo_kwargs,
+    ) -> TuneOutcome:
+        misplaced = sorted({
+            "batch_size", "patience", "max_workers", "workers", "timeout_s",
+            "retries", "isolation", "clear_caches", "cache_path", "log_path",
+        } & set(algo_kwargs))
+        if misplaced:
+            raise ValueError(
+                f"optimize(): {', '.join(misplaced)} are engine/storage "
+                "knobs, not strategy kwargs — configure them on EngineConfig "
+                "(engine=...) or the study directory"
+            )
+        factory = _factory_for(algorithm)
+        if budget is not None:
+            budget_kwarg = getattr(factory, "budget_kwarg", None)
+            if not budget_kwarg:
+                raise ValueError(
+                    f"algorithm {algorithm!r} does not define a budget knob — "
+                    "pass its own kwargs (e.g. samples_per_param for gsft, "
+                    "m/k/max_rounds for crs)"
+                )
+            algo_kwargs.setdefault(budget_kwarg, int(budget))
+        if "seed" not in algo_kwargs and _accepts_kwarg(factory, "seed"):
+            algo_kwargs["seed"] = self.seed if seed is None else int(seed)
+
+        sid = self._next_session_id()
+        # provenance that fails to round-trip through JSON is recorded as
+        # DROPPED, not silently as null — resume() refuses lossy records
+        # rather than re-running the session minus its constraints. That
+        # includes an explicitly-passed history= (it was budget-charged
+        # evidence in this session; a resume must not swap it for the cache).
+        dropped = [
+            k for k, v in algo_kwargs.items() if _jsonable(v) is _MISSING
+        ]
+        if fixed and _jsonable(dict(fixed)) is _MISSING:
+            dropped.append("fixed")
+        start_rec = {
+            "event": "start",
+            "session": sid,
+            "ts": time.time(),
+            "platform": platform,
+            "algorithm": algorithm,
+            "space": space.platform,
+            "budget": budget,
+            "seed": algo_kwargs.get("seed"),
+            "fixed": dict(fixed) if fixed and "fixed" not in dropped else None,
+            "active_params": list(active_params) if active_params else None,
+            "args": {
+                k: v for k, v in algo_kwargs.items()
+                if _jsonable(v) is not _MISSING
+            },
+            "engine": eng.to_dict(),
+            "log_path": str(scheduler.log_path) if scheduler.log_path else None,
+            "evaluator_spec": _spec_ref(evaluator),
+        }
+        if dropped:
+            start_rec["args_dropped"] = sorted(dropped)
+        if resumes is not None:
+            start_rec["resumes"] = resumes
+        self._record(start_rec)
+
+        try:
+            outcome = run_session(
+                scheduler, platform, algorithm, space,
+                fixed=fixed, active_params=active_params,
+                **eng.run_kwargs(), **algo_kwargs,
+            )
+        except Exception as e:
+            # a deterministic failure (bad kwarg, broken strategy) closes the
+            # session so resume() can't latch onto it forever; interruptions
+            # (KeyboardInterrupt and harder) stay open — they ARE the resume
+            # case
+            self._record({
+                "event": "failed",
+                "session": sid,
+                "ts": time.time(),
+                "error": f"{type(e).__name__}: {e}",
+            })
+            raise
+        self._record({
+            "event": "done",
+            "session": sid,
+            "ts": time.time(),
+            "summary": outcome.summary(),
+        })
+        self._outcomes.append(outcome)
+        return outcome
+
+    def resume(
+        self,
+        evaluator: Any = None,
+        *,
+        space: Optional[TunableSpace] = None,
+        engine: Optional[EngineConfig] = None,
+    ) -> TuneOutcome:
+        """Re-enter the most recent interrupted session (a ``start`` record
+        with no matching ``done``), paying only the unpaid remainder — every
+        trial the crashed session persisted replays from the cache, and a
+        history-aware strategy resumes with the budget it already spent.
+
+        The evaluator is rebuilt from the session's stored
+        ``EvaluatorSpec`` recipe when it has one; otherwise pass
+        ``evaluator=`` explicitly.
+        """
+        done = {r["session"] for r in self._sessions if r["event"] == "done"}
+        resumes_of = {
+            r["session"]: r["resumes"] for r in self._sessions
+            if r["event"] == "start" and r.get("resumes") is not None
+        }
+        # a resume attempt closes its target only once it actually COMPLETES
+        # (a failed resume re-opens the original — its unpaid remainder is
+        # still owed), and completion propagates down resume CHAINS: if
+        # session 3 resumed session 2 which resumed session 1, session 3
+        # finishing pays off all three
+        completed = set(done)
+        frontier = True
+        while frontier:
+            frontier = {
+                target for sid, target in resumes_of.items()
+                if sid in completed and target not in completed
+            }
+            completed |= frontier
+        closed = completed | {
+            r["session"] for r in self._sessions if r["event"] == "failed"
+        }
+        open_recs = [
+            r for r in self._sessions
+            if r["event"] == "start" and r["session"] not in closed
+        ]
+        if not open_recs:
+            raise ValueError(
+                "nothing to resume: every recorded session completed"
+            )
+        rec = open_recs[-1]
+        if rec.get("args_dropped"):
+            raise ValueError(
+                f"session {rec['session']} cannot be resumed faithfully: "
+                f"{', '.join(rec['args_dropped'])} did not round-trip through "
+                "the session manifest (non-JSON values) — re-run optimize() "
+                "with the original arguments instead"
+            )
+        if evaluator is None:
+            ref = rec.get("evaluator_spec")
+            if not ref:
+                raise ValueError(
+                    f"session {rec['session']} ({rec['platform']}/"
+                    f"{rec['algorithm']}) stored no evaluator recipe — pass "
+                    "evaluator= to resume()"
+                )
+            from repro.core.executors import EvaluatorSpec
+
+            evaluator = EvaluatorSpec(
+                target=ref["target"], args=tuple(ref.get("args", ())),
+                kwargs=dict(ref.get("kwargs", {})),
+                construct=bool(ref.get("construct", True)),
+            ).resolve()
+        space = space or _space_for(rec.get("space") or rec["platform"])
+        eng = engine or EngineConfig.from_dict(rec.get("engine", {}))
+        kwargs = dict(rec.get("args") or {})
+        seed = kwargs.pop("seed", None)  # recorded post-injection; re-route
+        scheduler = self.scheduler(
+            evaluator, platform=rec["platform"], engine=eng,
+            # a session logging to a custom file (per-cell logs) must keep
+            # appending there — the remainder must not land elsewhere
+            log_path=Path(rec["log_path"]) if rec.get("log_path") else None,
+        )
+        try:
+            return self._run_session(
+                scheduler, rec["platform"], rec["algorithm"], space, eng,
+                budget=None, seed=seed, fixed=rec.get("fixed"),
+                active_params=rec.get("active_params"), evaluator=evaluator,
+                resumes=rec["session"], **kwargs,
+            )
+        finally:
+            scheduler.close()
+
+    # ---------------------------------------------------------------- cells
+
+    def has_cell(self, arch: str, shape: str) -> bool:
+        """Whether :meth:`cell` already holds a handle for this cell (so a
+        caller can reuse it without re-supplying setup arguments)."""
+        return f"{arch}:{shape}" in self._cells
+
+    def cell(
+        self,
+        arch: str,
+        shape: str,
+        *,
+        chips: Optional[int] = None,
+        evaluator: Any = None,
+        log_path: Optional[Path] = None,
+    ) -> "StudyCell":
+        """Handle for one (arch × shape) cell of a tuning matrix. Repeated
+        calls return the same handle, so the cell's sessions share one
+        scheduler (probe memo and all) on top of the study-wide cache — and
+        therefore a repeat call may not silently change the cell's setup:
+        explicitly passed ``chips``/``evaluator``/``log_path`` that conflict
+        with the existing handle's raise (its cached measurements were taken
+        under the first call's setup). ``chips=None`` means "no opinion"
+        (defaults to 256 on creation). The chip count is persisted with the
+        study, so the guard holds ACROSS processes too: reopening a study
+        with a conflicting explicit ``chips`` raises rather than silently
+        replaying the other topology's cached measurements (evaluator and
+        log_path conflicts are only detectable within one process)."""
+        key = f"{arch}:{shape}"
+        cell = self._cells.get(key)
+        if cell is None:
+            stored = next(
+                (r for r in self._sessions
+                 if r.get("event") == "cell" and r.get("cell") == key),
+                None,
+            )
+            if stored is not None:
+                if chips is not None and chips != stored["chips"]:
+                    raise ValueError(
+                        f"cell {key!r} was created in this study with "
+                        f"chips={stored['chips']} — its cached trials were "
+                        f"measured under that topology; use a separate study "
+                        f"for chips={chips}"
+                    )
+                eff_chips = int(stored["chips"])
+            else:
+                eff_chips = 256 if chips is None else int(chips)
+                self._record({
+                    "event": "cell", "cell": key, "chips": eff_chips,
+                    "ts": time.time(),
+                })
+            cell = self._cells[key] = StudyCell(
+                self, arch, shape, chips=eff_chips,
+                evaluator=evaluator, log_path=log_path,
+            )
+            return cell
+        conflicts = []
+        if chips is not None and chips != cell.chips:
+            conflicts.append("chips")
+        if evaluator is not None and evaluator is not cell._evaluator:
+            conflicts.append("evaluator")
+        if log_path is not None and log_path != cell._log_path:
+            conflicts.append("log_path")
+        if conflicts:
+            raise ValueError(
+                f"cell {key!r} already exists with different "
+                f"{', '.join(conflicts)} — its cached trials were measured "
+                "under the first call's setup; use a separate study (or cell "
+                "name) for a different configuration"
+            )
+        return cell
+
+    # ------------------------------------------------------------ accessors
+
+    def scheduler(
+        self,
+        evaluator: Any,
+        *,
+        platform: str,
+        engine: Optional[EngineConfig] = None,
+        log_path: Optional[Path] = None,
+    ) -> TrialScheduler:
+        """A TrialScheduler wired to this study's storage — the seam for
+        drivers that run strategies directly (the curated hillclimb sweep).
+        The caller owns closing it (or hands it to the study via cells)."""
+        eng = engine or self.engine
+        return TrialScheduler(
+            evaluator,
+            platform=platform,
+            log_path=log_path or self.log_path,
+            cache_path=self.cache_path,
+            **eng.scheduler_kwargs(),
+        )
+
+    def trials(self, platform: Optional[str] = None) -> List[Dict[str, Any]]:
+        """Every logged trial record, optionally filtered to one platform."""
+        if self.log_path is None or not self.log_path.exists():
+            return []
+        return read_log(self.log_path, platform=platform)
+
+    def _candidates(self) -> List[Dict[str, Any]]:
+        """Successful measurements across the study, one file read: cache
+        records plus this process's outcomes (in-memory studies have no
+        cache file)."""
+        candidates: List[Dict[str, Any]] = []
+        if self.cache_path is not None:
+            candidates += [
+                {
+                    "platform": rec.get("platform"),
+                    "config": rec.get("config"),
+                    "time_s": float(rec["time_s"]),
+                }
+                for rec in iter_jsonl(self.cache_path)
+                if rec.get("status", "ok") == "ok" and "time_s" in rec
+            ]
+        for out in self._outcomes:
+            candidates.append({
+                "platform": out.platform,
+                "config": out.best_config,
+                "time_s": out.best_time,
+            })
+        return candidates
+
+    def best(self, platform: Optional[str] = None) -> Dict[str, Any]:
+        """Best successful measurement across the whole study (or one
+        platform): ``{"platform", "config", "time_s"}``."""
+        candidates = [
+            c for c in self._candidates()
+            if platform is None or c["platform"] == platform
+        ]
+        if not candidates:
+            where = f" (platform={platform!r})" if platform else ""
+            raise ValueError(f"no successful trials in study{where}")
+        return min(candidates, key=lambda r: r["time_s"])
+
+    def sessions(self) -> List[Dict[str, Any]]:
+        """Raw session provenance records (start/done events, file order)."""
+        return list(self._sessions)
+
+    def report(self) -> Dict[str, Any]:
+        """The paper's reduction table, one row per session, with
+        per-session cache/evaluation deltas (never lifetime totals)."""
+        done = {
+            r["session"]: r for r in self._sessions if r["event"] == "done"
+        }
+        failed = {
+            r["session"] for r in self._sessions if r["event"] == "failed"
+        }
+        rows = []
+        platforms = set()
+        for rec in self._sessions:
+            if rec["event"] != "start":
+                continue
+            sid = rec["session"]
+            platforms.add(rec["platform"])
+            row: Dict[str, Any] = {
+                "session": sid,
+                "platform": rec["platform"],
+                "algorithm": rec["algorithm"],
+                "status": ("done" if sid in done
+                           else "failed" if sid in failed
+                           else "interrupted"),
+            }
+            if rec.get("resumes") is not None:
+                row["resumes"] = rec["resumes"]
+            if sid in done:
+                s = done[sid].get("summary", {})
+                for k in ("default_time_s", "best_time_s", "reduction_pct",
+                          "evaluations", "timeouts", "cache_stats"):
+                    if k in s:
+                        row[k] = s[k]
+            rows.append(row)
+        best: Dict[str, Dict[str, Any]] = {}
+        for cand in self._candidates():  # one cache read for every platform
+            p = cand["platform"]
+            if p in platforms and (
+                p not in best or cand["time_s"] < best[p]["time_s"]
+            ):
+                best[p] = cand
+        best = dict(sorted(best.items()))
+        return {
+            "study": str(self.path) if self.path else None,
+            "sessions": rows,
+            "best": best,
+        }
+
+    # -------------------------------------------------------------- plumbing
+
+    def _track(self, scheduler: TrialScheduler) -> None:
+        self._open_schedulers.append(scheduler)
+
+    def _next_session_id(self) -> int:
+        ids = [r["session"] for r in self._sessions if "session" in r]
+        return (max(ids) + 1) if ids else 1
+
+    def _record(self, rec: Dict[str, Any]) -> None:
+        self._sessions.append(rec)
+        if self._sessions_path is not None:
+            with self._sessions_path.open("a") as f:
+                f.write(json.dumps(rec, default=str) + "\n")
+
+    def _load_sessions(self) -> List[Dict[str, Any]]:
+        if self._sessions_path is None:
+            return []
+        return iter_jsonl(self._sessions_path)
+
+
+# ----------------------------------------------------------------- studycell
+
+
+class StudyCell:
+    """One (arch × shape) cell of a tuning matrix, bound to a study.
+
+    All of a cell's sessions share one TrialScheduler — so the roofline
+    probe-compile memo survives across sessions — while the cell's trials are
+    namespaced ``{train|serve}/arch:shape`` in the study-wide cache (the same
+    knob dict on a different cell must never collide)."""
+
+    def __init__(
+        self,
+        study: Study,
+        arch: str,
+        shape: str,
+        *,
+        chips: int = 256,
+        evaluator: Any = None,
+        log_path: Optional[Path] = None,
+    ):
+        from repro.configs.base import SHAPES
+
+        if shape not in SHAPES:
+            raise ValueError(
+                f"unknown shape {shape!r} (known: {sorted(SHAPES)})"
+            )
+        self.study = study
+        self.arch_name = arch
+        self.shape_name = shape
+        self.chips = int(chips)
+        self.platform = "train" if SHAPES[shape].kind == "train" else "serve"
+        self.space = SPACES[self.platform]
+        self.platform_key = f"{self.platform}/{arch}:{shape}"
+        self._evaluator = evaluator
+        self._default_evaluator = evaluator is None
+        self._log_path = log_path
+        self._scheduler: Optional[TrialScheduler] = None
+        self._engine: Optional[EngineConfig] = None
+
+    @property
+    def name(self) -> str:
+        return f"{self.arch_name}:{self.shape_name}"
+
+    def evaluator(self) -> Any:
+        if self._evaluator is None:
+            from repro.configs.archs import get_arch
+            from repro.configs.base import SHAPES
+            from repro.core.evaluators import RooflineEvaluator
+
+            arch = get_arch(self.arch_name)
+            shape = SHAPES[self.shape_name]
+            if shape.name in arch.skip_shapes:
+                raise ValueError(
+                    f"{self.shape_name} is skipped for {self.arch_name}"
+                )
+            self._evaluator = RooflineEvaluator(
+                arch, shape, self.space, chips=self.chips
+            )
+        return self._evaluator
+
+    def scheduler(self) -> TrialScheduler:
+        if self._scheduler is None:
+            eng = self.study.engine
+            if self._default_evaluator:
+                # the roofline evaluator mutates global compiler state; match
+                # the historical multi-cell discipline of clearing jit caches
+                eng = eng.replace(clear_caches=True)
+            self._engine = eng
+            self._scheduler = self.study.scheduler(
+                self.evaluator(), platform=self.platform_key, engine=eng,
+                log_path=self._log_path,
+            )
+            self.study._track(self._scheduler)
+        return self._scheduler
+
+    def optimize(
+        self,
+        algorithm: str,
+        *,
+        budget: Optional[int] = None,
+        seed: Optional[int] = None,
+        fixed: Optional[Dict[str, Any]] = None,
+        active_params: Optional[Sequence[str]] = None,
+        **algo_kwargs,
+    ) -> TuneOutcome:
+        """One tuning session on this cell, through its shared scheduler."""
+        scheduler = self.scheduler()
+        assert self._engine is not None
+        return self.study._run_session(
+            scheduler, self.platform_key, algorithm, self.space, self._engine,
+            budget=budget, seed=seed, fixed=fixed,
+            active_params=active_params, evaluator=self._evaluator,
+            **algo_kwargs,
+        )

@@ -1,57 +1,34 @@
-"""Admin facade (paper Figure I): pick a platform and an algorithm, run the
-tuning, get the best configuration + the reduction vs. the all-defaults run.
+"""Admin facade (paper Figure I) — **deprecated shim**.
 
-Every algorithm — gsft, crs, hillclimb, tpe, and whatever registers next — runs
-through the same ask/tell ``Strategy`` + ``TrialScheduler`` engine, so the
-engine knobs (``max_workers`` parallel batches, ``cache_path`` persistent
-evaluation cache, ``patience`` pruning, per-trial ``timeout_s``/``retries``)
-apply uniformly.
+``tune()`` predates the :class:`repro.core.study.Study` API and survives as a
+thin wrapper: one call builds a throwaway in-memory Study (or, given an
+explicit ``scheduler``, runs the shared session engine directly) and returns
+the same :class:`TuneOutcome`. New code should hold a Study instead — it
+keeps the evaluation cache, trial log, and session provenance in one place
+and can resume interrupted sessions::
+
+    study = Study.open("results/studies/my-study")
+    study.optimize(platform, algorithm, evaluator, budget=48)
+
+The engine knobs accepted here (``max_workers``/``timeout_s``/``retries``/
+``isolation``/``batch_size``/``patience``/``clear_caches_between_trials``)
+map 1:1 onto :class:`repro.core.study.EngineConfig` — see the README's
+migration table.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import warnings
 from pathlib import Path
 from typing import Any, Dict, Optional, Sequence
 
 from repro.core.scheduler import Evaluator, TrialScheduler
 from repro.core.space import SPACES, TunableSpace
-from repro.core.strategies import STRATEGIES, make_strategy
-
-
-@dataclass
-class TuneOutcome:
-    platform: str
-    algorithm: str
-    default_time: float
-    best_time: float
-    best_config: Dict[str, Any]
-    evaluations: int
-    detail: Any = None
-    cache_stats: Optional[Dict[str, int]] = None
-    timeouts: int = 0  # trials that hit the (soft) per-trial deadline
-
-    @property
-    def reduction_pct(self) -> float:
-        """The paper's headline metric: % reduction in execution time vs. the
-        all-defaults configuration."""
-        if self.default_time in (0.0, float("inf")):
-            return 0.0
-        return 100.0 * (self.default_time - self.best_time) / self.default_time
-
-    def summary(self) -> Dict[str, Any]:
-        out = {
-            "platform": self.platform,
-            "algorithm": self.algorithm,
-            "default_time_s": self.default_time,
-            "best_time_s": self.best_time,
-            "reduction_pct": round(self.reduction_pct, 2),
-            "evaluations": self.evaluations,
-            "timeouts": self.timeouts,
-            "best_config": self.best_config,
-        }
-        if self.cache_stats:
-            out["cache_stats"] = self.cache_stats
-        return out
+from repro.core.study import (  # noqa: F401 — TuneOutcome re-exported here
+    EngineConfig,
+    Study,
+    TuneOutcome,
+    run_session,
+)
 
 
 def tune(
@@ -76,10 +53,21 @@ def tune(
 ) -> TuneOutcome:
     """Run one tuning session (the Admin's 'select algorithm × platform').
 
+    .. deprecated:: PR 4
+        ``tune()`` is a shim over a throwaway :class:`Study`. Prefer
+        ``Study.open(dir).optimize(...)`` — it persists the cache/log/session
+        provenance together and supports ``resume()``/``report()``.
+
     Pass ``scheduler`` to share one engine (and its memo + persistent cache)
-    across several sessions — the multi-cell driver does. Engine knobs and
-    ``scheduler`` are mutually exclusive: a conflicting combination raises
-    instead of silently ignoring the knobs."""
+    across several sessions. Engine knobs and ``scheduler`` are mutually
+    exclusive: a conflicting combination raises instead of silently ignoring
+    the knobs."""
+    warnings.warn(
+        "tune() is deprecated — use repro.core.study.Study "
+        "(Study.open(dir).optimize(...)) instead",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     space = space or SPACES[platform]
     if scheduler is not None:
         ignored = [
@@ -99,62 +87,26 @@ def tune(
                 "an explicit scheduler is passed — configure them on the "
                 "TrialScheduler instead"
             )
-    created_scheduler = scheduler is None
-    if created_scheduler:
-        scheduler = TrialScheduler(
-            evaluator,
-            platform=platform,
-            log_path=log_path,
-            clear_caches_between_trials=clear_caches_between_trials,
-            max_workers=max_workers,
-            cache_path=cache_path,
-            timeout_s=timeout_s,
-            retries=retries,
-            isolation=isolation,
+        return run_session(
+            scheduler, platform, algorithm, space,
+            fixed=fixed, active_params=active_params,
+            batch_size=batch_size, patience=patience,
+            **algo_kwargs,
         )
 
-    if algorithm not in STRATEGIES:
-        raise ValueError(
-            f"unknown algorithm {algorithm!r} (use one of {sorted(STRATEGIES)})"
+    engine = EngineConfig(
+        workers=max_workers,
+        isolation=isolation,
+        timeout_s=timeout_s,
+        retries=retries,
+        patience=patience,
+        batch_size=batch_size,
+        clear_caches=clear_caches_between_trials,
+    )
+    study = Study(engine=engine, cache_path=cache_path, log_path=log_path)
+    with study:
+        return study.optimize(
+            platform, algorithm, evaluator,
+            space=space, fixed=fixed, active_params=active_params,
+            **algo_kwargs,
         )
-    # warm-start a model-based strategy (TPE) from the persistent eval cache
-    # *before* the defaults trial lands in it: a re-run over a complete cache
-    # resumes with its full observation history and proposes nothing fresh
-    if (
-        getattr(STRATEGIES[algorithm], "supports_history", False)
-        and "history" not in algo_kwargs
-    ):
-        algo_kwargs["history"] = scheduler.cached_observations()
-
-    # per-run accounting: deltas against the scheduler's lifetime counters,
-    # so a shared multi-cell scheduler doesn't inflate every cell's report
-    evals_before = scheduler.num_evaluations
-    timeouts_before = scheduler.timeout_trials
-    try:
-        defaults = {**space.defaults(), **(fixed or {})}
-        default_time = scheduler.evaluate(defaults, tag="default")
-
-        if algorithm in ("gsft", "grid"):
-            algo_kwargs.setdefault("active_params", active_params)
-        strategy = make_strategy(algorithm, space, fixed=fixed, **algo_kwargs)
-        result = scheduler.run(strategy, batch_size=batch_size, patience=patience)
-        best_config, best_time = result.best_config, result.best_time
-
-        # defaults themselves might be the optimum; the log keeps everything
-        if default_time < best_time:
-            best_config, best_time = defaults, default_time
-
-        return TuneOutcome(
-            platform=platform,
-            algorithm=algorithm,
-            default_time=default_time,
-            best_time=best_time,
-            best_config=best_config,
-            evaluations=scheduler.num_evaluations - evals_before,
-            detail=result,
-            cache_stats=scheduler.cache_stats(),
-            timeouts=scheduler.timeout_trials - timeouts_before,
-        )
-    finally:
-        if created_scheduler:
-            scheduler.close()  # reap warm subprocess workers; inline: no-op

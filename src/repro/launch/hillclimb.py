@@ -18,7 +18,7 @@ from pathlib import Path
 
 from repro.configs.base import SHAPES
 from repro.configs.archs import get_arch
-from repro.core import SPACES, CuratedHillclimbStrategy, TrialScheduler
+from repro.core import SPACES, CuratedHillclimbStrategy, Study, TrialScheduler
 from repro.core.evaluators import RooflineEvaluator
 
 # (name, hypothesis, overrides) per cell — the napkin math lives in
@@ -56,25 +56,49 @@ CANDIDATES = {
 
 
 def run_cell_sweep(cell: str, out_dir: Path, *, cache_path: Path = None,
-                   scheduler: TrialScheduler = None):
+                   scheduler: TrialScheduler = None, study=None):
+    if study is not None and (cache_path is not None or scheduler is not None):
+        raise ValueError(
+            "run_cell_sweep(): cache_path/scheduler would be silently "
+            "ignored when a study is passed — the study owns storage and "
+            "engine configuration"
+        )
     arch_name, shape_name = cell.split(":")
     arch = get_arch(arch_name)
     shape = SHAPES[shape_name]
     platform = "train" if shape.kind == "train" else "serve"
     space = SPACES[platform]
+    # per-cell namespace in any shared cache (same discipline as Study.cell):
+    # the same knob dict on a different cell must never collide
+    platform_key = f"{platform}/{cell}"
 
-    if scheduler is None:
-        evaluator = RooflineEvaluator(
-            arch, shape, space, chips=256, memory_penalty="soft"
+    if study is not None:
+        # a full Study session: the sweep lands in sessions.jsonl (report()
+        # rows, resumable provenance) and shares the study-wide cache under
+        # the cell's namespace — "hillclimb" is a registered strategy like
+        # any other
+        outcome = study.cell(arch_name, shape_name).optimize(
+            "hillclimb", moves=CANDIDATES[cell]
         )
-        scheduler = TrialScheduler(
-            evaluator,
-            platform=platform,
-            cache_path=cache_path,
-            clear_caches_between_trials=True,
-        )
-    strategy = CuratedHillclimbStrategy(space, moves=CANDIDATES[cell])
-    res = scheduler.run(strategy)
+        res = outcome.detail
+    else:
+        created = scheduler is None
+        if scheduler is None:
+            evaluator = RooflineEvaluator(
+                arch, shape, space, chips=256, memory_penalty="soft"
+            )
+            scheduler = TrialScheduler(
+                evaluator,
+                platform=platform_key,
+                cache_path=cache_path,
+                clear_caches_between_trials=True,
+            )
+        strategy = CuratedHillclimbStrategy(space, moves=CANDIDATES[cell])
+        try:
+            res = scheduler.run(strategy)
+        finally:
+            if created:
+                scheduler.close()
 
     results = res.records
     base = results[0].get("t_step_s", float("nan")) if results else float("nan")
@@ -93,10 +117,18 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--cell", choices=list(CANDIDATES), required=True)
     ap.add_argument("--out", type=Path, default=Path("results/perf"))
+    ap.add_argument("--study", type=Path, default=None,
+                    help="Study directory (cache + trial log; replaces --cache)")
     ap.add_argument("--cache", type=Path, default=None,
-                    help="persistent JSONL evaluation cache")
+                    help="legacy persistent JSONL evaluation cache "
+                         "(ignored when --study is given)")
     args = ap.parse_args()
-    run_cell_sweep(args.cell, args.out, cache_path=args.cache)
+    study = Study.open(args.study) if args.study else None
+    try:
+        run_cell_sweep(args.cell, args.out, cache_path=args.cache, study=study)
+    finally:
+        if study is not None:
+            study.close()
     return 0
 
 

@@ -1,18 +1,20 @@
 """Multi-cell tuning driver: tune several (arch × shape) cells in ONE
-invocation, all sessions sharing one persistent evaluation cache.
+invocation, all sessions going through one Study (shared persistent
+evaluation cache, shared trial log, session provenance per cell).
 
 The paper's Admin tunes one platform at a time; a production fleet has a
 matrix of cells (model × context shape) to keep tuned. This driver walks the
-matrix, builds a RooflineEvaluator per cell, and runs the chosen strategy for
-each through TrialSchedulers that append to the same JSONL cache — so
-repeated configurations across cells and across invocations are free, and a
-re-run after a crash resumes where the cache left off.
+matrix through ``Study.cell(arch, shape)`` handles — each cell shares one
+scheduler across its sessions and the study-wide cache across cells — so
+repeated configurations are free, and a re-run after a crash resumes where
+the cache left off.
 
     PYTHONPATH=src python -m repro.launch.multicell \
         --cells llama3.2-1b:train_4k llama3.2-1b:decode_32k \
-        --algorithm gsft --cache results/eval_cache.jsonl
+        --algorithm gsft --study results/studies/fleet
 
-Emits one summary JSON per cell plus a fleet table on stdout.
+Emits one summary JSON per cell plus a fleet table on stdout. The legacy
+``--cache``/``--log-dir`` pair still works when no ``--study`` is given.
 """
 import os
 
@@ -24,8 +26,7 @@ from pathlib import Path
 
 from repro.configs.archs import get_arch
 from repro.configs.base import SHAPES
-from repro.core import SPACES, tune
-from repro.core.evaluators import RooflineEvaluator
+from repro.core import SPACES, EngineConfig, Study
 
 
 def cell_platform(shape_name: str) -> str:
@@ -36,7 +37,8 @@ def tune_cells(
     cells,
     *,
     algorithm: str = "gsft",
-    chips: int = 256,
+    chips: int = None,  # None = no opinion (256 on cell creation)
+    study: Study = None,
     cache_path: Path = None,
     log_dir: Path = None,
     patience: int = None,
@@ -44,53 +46,92 @@ def tune_cells(
     isolation: str = "inline",
     jobs: int = 1,
     trial_timeout: float = None,
+    evaluator_factory=None,
     **algo_kwargs,
 ):
-    """Tune each ``arch:shape`` cell; returns {cell: TuneOutcome}. One shared
-    ``cache_path`` makes the matrix incremental across sessions."""
-    outcomes = {}
-    for cell in cells:
-        arch_name, sep, shape_name = cell.partition(":")
-        if not sep or not shape_name:
-            raise SystemExit(
-                f"bad cell {cell!r}: expected ARCH:SHAPE, e.g. llama3.2-1b:train_4k"
-            )
-        if shape_name not in SHAPES:
-            raise SystemExit(
-                f"bad cell {cell!r}: unknown shape {shape_name!r} "
-                f"(known: {sorted(SHAPES)})"
-            )
-        arch = get_arch(arch_name)
-        shape = SHAPES[shape_name]
-        if shape.name in arch.skip_shapes:
-            print(f"[{cell}] SKIP (arch skips shape)")
-            continue
-        platform = cell_platform(shape_name)
-        space = SPACES[platform]
-        evaluator = RooflineEvaluator(arch, shape, space, chips=chips)
-        # platform key namespaces the shared cache per cell: same knob dict
-        # on a different cell must never collide
-        outcome = tune(
-            f"{platform}/{cell}",
-            algorithm,
-            evaluator,
-            space=space,
-            log_path=(log_dir / f"{arch_name}__{shape_name}.jsonl") if log_dir else None,
+    """Tune each ``arch:shape`` cell; returns {cell: TuneOutcome}.
+
+    Pass ``study`` to make the matrix incremental across sessions (the CLI's
+    ``--study``); without one, a throwaway in-memory Study wraps the legacy
+    ``cache_path``/``log_dir`` files. Engine knobs and ``study`` are mutually
+    exclusive (configure the study's EngineConfig instead) — a conflicting
+    combination raises rather than silently ignoring the knobs, like
+    ``tune()``. ``evaluator_factory(arch, shape, space, platform)`` overrides
+    the default RooflineEvaluator per cell (tests use a FunctionEvaluator
+    matrix)."""
+    owns_study = study is None
+    if owns_study:
+        study = Study(
+            engine=EngineConfig(
+                workers=jobs, isolation=isolation, timeout_s=trial_timeout,
+                patience=patience, batch_size=batch_size,
+            ),
             cache_path=cache_path,
-            patience=patience,
-            batch_size=batch_size,
-            clear_caches_between_trials=True,
-            isolation=isolation,
-            max_workers=jobs,
-            timeout_s=trial_timeout,
-            **algo_kwargs,
         )
-        outcomes[cell] = outcome
-        s = outcome.summary()
-        print(f"[{cell}] best={s['best_time_s']:.4f}s "
-              f"default={s['default_time_s']:.4f}s "
-              f"reduction={s['reduction_pct']:.1f}% "
-              f"evals={s['evaluations']} cache={s.get('cache_stats')}", flush=True)
+    else:
+        ignored = [
+            name for name, off_default in (
+                ("jobs", jobs != 1),
+                ("isolation", isolation != "inline"),
+                ("trial_timeout", trial_timeout is not None),
+                ("patience", patience is not None),
+                ("batch_size", batch_size is not None),
+                ("cache_path", cache_path is not None),
+            ) if off_default
+        ]
+        if ignored:
+            raise ValueError(
+                f"tune_cells(): {', '.join(ignored)} would be silently "
+                "ignored when an explicit study is passed — configure them "
+                "on the study's EngineConfig instead"
+            )
+    outcomes = {}
+    try:
+        for cell in cells:
+            arch_name, sep, shape_name = cell.partition(":")
+            if not sep or not shape_name:
+                raise SystemExit(
+                    f"bad cell {cell!r}: expected ARCH:SHAPE, e.g. llama3.2-1b:train_4k"
+                )
+            if shape_name not in SHAPES:
+                raise SystemExit(
+                    f"bad cell {cell!r}: unknown shape {shape_name!r} "
+                    f"(known: {sorted(SHAPES)})"
+                )
+            arch = get_arch(arch_name)
+            if SHAPES[shape_name].name in arch.skip_shapes:
+                print(f"[{cell}] SKIP (arch skips shape)")
+                continue
+            platform = cell_platform(shape_name)
+            if study.has_cell(arch_name, shape_name):
+                # repeat pass over an open study (second algorithm, or a
+                # duplicated --cells entry): reuse the handle — and never
+                # build a second evaluator for the same cell. An explicit
+                # chips request still hits cell()'s conflict guard.
+                handle = study.cell(arch_name, shape_name, chips=chips)
+            else:
+                handle = study.cell(
+                    arch_name, shape_name, chips=chips,
+                    evaluator=(
+                        evaluator_factory(
+                            arch_name, shape_name, SPACES[platform], platform,
+                        ) if evaluator_factory else None
+                    ),
+                    log_path=(
+                        log_dir / f"{arch_name}__{shape_name}.jsonl"
+                        if log_dir else None
+                    ),
+                )
+            outcome = handle.optimize(algorithm, **algo_kwargs)
+            outcomes[cell] = outcome
+            s = outcome.summary()
+            print(f"[{cell}] best={s['best_time_s']:.4f}s "
+                  f"default={s['default_time_s']:.4f}s "
+                  f"reduction={s['reduction_pct']:.1f}% "
+                  f"evals={s['evaluations']} cache={s.get('cache_stats')}", flush=True)
+    finally:
+        if owns_study:
+            study.close()
     return outcomes
 
 
@@ -100,23 +141,33 @@ def main(argv=None):
                     metavar="ARCH:SHAPE", help="e.g. llama3.2-1b:train_4k")
     ap.add_argument("--algorithm", "--strategy", dest="algorithm", default="gsft",
                     choices=["gsft", "crs", "tpe"])
-    ap.add_argument("--chips", type=int, default=256)
+    ap.add_argument("--chips", type=int, default=None,
+                    help="chip count for new cells (default 256); an explicit "
+                         "value conflicting with a study cell's stored setup "
+                         "raises instead of silently reusing it")
     ap.add_argument("--samples", type=int, default=2)
     ap.add_argument("--budget", type=int, default=32,
                     help="tpe per-cell trial budget (shared-cache history counts)")
     ap.add_argument("--seed", type=int, default=0, help="crs/tpe rng seed")
-    ap.add_argument("--cache", type=Path, default=Path("results/eval_cache.jsonl"))
-    ap.add_argument("--log-dir", type=Path, default=Path("results/multicell"))
+    ap.add_argument("--study", type=Path, default=None,
+                    help="Study directory shared by every cell (cache + log + "
+                         "session provenance; replaces --cache/--log-dir)")
+    ap.add_argument("--cache", type=Path, default=Path("results/eval_cache.jsonl"),
+                    help="legacy shared cache (ignored when --study is given)")
+    ap.add_argument("--log-dir", type=Path, default=Path("results/multicell"),
+                    help="legacy per-cell logs (ignored when --study is given)")
     ap.add_argument("--out", type=Path, default=Path("results/multicell/summary.json"))
+    # None defaults = "flag not given" so explicit values can override a
+    # persistent study's stored engine without untyped flags clobbering it
     ap.add_argument("--patience", type=int, default=None)
     ap.add_argument("--batch", type=int, default=None)
-    ap.add_argument("--jobs", type=int, default=1,
-                    help="parallel trials per batch")
+    ap.add_argument("--jobs", type=int, default=None,
+                    help="parallel trials per batch (default 1)")
     ap.add_argument("--trial-timeout", "--timeout", dest="trial_timeout",
                     type=float, default=None,
                     help="per-trial timeout in seconds (hard SIGKILL under "
                          "--isolation subprocess)")
-    ap.add_argument("--isolation", default="inline",
+    ap.add_argument("--isolation", default=None,
                     choices=["inline", "subprocess"],
                     help="trial execution backend (see launch/tune.py)")
     args = ap.parse_args(argv)
@@ -126,20 +177,41 @@ def main(argv=None):
     elif args.algorithm == "crs":
         algo_kwargs = {"seed": args.seed}
     else:  # tpe — each cell warm-starts from its own slice of the shared cache
-        algo_kwargs = {"max_trials": args.budget, "seed": args.seed}
-    outcomes = tune_cells(
-        args.cells,
-        algorithm=args.algorithm,
-        chips=args.chips,
-        cache_path=args.cache,
-        log_dir=args.log_dir,
-        patience=args.patience,
-        batch_size=args.batch,
-        isolation=args.isolation,
-        jobs=args.jobs,
-        trial_timeout=args.trial_timeout,
-        **algo_kwargs,
-    )
+        algo_kwargs = {"budget": args.budget, "seed": args.seed}
+    from repro.launch.tune import engine_config, engine_overrides, \
+        open_persistent_study
+
+    # explicitly-typed flags overlay the stored engine per-field; untyped
+    # flags don't clobber what the study was configured with
+    study = open_persistent_study(args.study, engine_overrides(args)) \
+        if args.study else None
+    # with --study the engine flags configure the Study's EngineConfig above;
+    # without one they flow into tune_cells' throwaway in-memory study
+    if study is not None:
+        engine_kwargs = {}
+    else:
+        engine = engine_config(args)  # fills engine defaults for untyped flags
+        engine_kwargs = dict(
+            cache_path=args.cache,
+            log_dir=args.log_dir,
+            patience=engine.patience,
+            batch_size=engine.batch_size,
+            isolation=engine.isolation,
+            jobs=engine.workers,
+            trial_timeout=engine.timeout_s,
+        )
+    try:
+        outcomes = tune_cells(
+            args.cells,
+            algorithm=args.algorithm,
+            chips=args.chips,
+            study=study,
+            **engine_kwargs,
+            **algo_kwargs,
+        )
+    finally:
+        if study is not None:
+            study.close()
     args.out.parent.mkdir(parents=True, exist_ok=True)
     args.out.write_text(json.dumps(
         {cell: o.summary() for cell, o in outcomes.items()}, indent=1, default=str

@@ -1,26 +1,29 @@
-"""Tuning driver — the paper's Admin box: pick platform × algorithm, run it
-through the ask/tell Strategy + TrialScheduler engine.
+"""Tuning driver — the paper's Admin box: pick platform × algorithm, run one
+Study session through the ask/tell Strategy + TrialScheduler engine.
 
-Roofline evaluator (production mesh, AOT — needs the 512 fake devices, so run
-it the same way as the dry-run):
+All state (persistent evaluation cache, trial log, session provenance) lives
+in one Study directory. Roofline evaluator (production mesh, AOT — needs the
+512 fake devices, so run it the same way as the dry-run):
 
     PYTHONPATH=src python -m repro.launch.tune --platform train \
-        --algorithm gsft --arch qwen2-72b --shape train_4k --evaluator roofline
+        --algorithm gsft --arch qwen2-72b --shape train_4k --evaluator roofline \
+        --study results/studies/train
 
 Walltime evaluator on the paper's WordCount job (CPU-measured, the faithful
-reproduction), four trials at a time with a persistent evaluation cache:
+reproduction), four trials at a time:
 
     PYTHONPATH=src python -m repro.launch.tune --platform wordcount \
-        --algorithm crs --jobs 4 --cache results/eval_cache.jsonl
+        --algorithm crs --jobs 4 --study results/studies/wc
 
-A warm-cache re-run of the same command performs zero fresh evaluations.
-
-TPE (model-based, batched acquisition) on the same platform — the persistent
-cache also warm-starts its observation history, so a crashed or repeated
-session resumes with the budget it already spent:
+A warm re-run of the same command performs zero fresh evaluations, and an
+interrupted run resumes from everything it already paid. TPE (model-based,
+batched acquisition) warm-starts its observation history from the same study:
 
     PYTHONPATH=src python -m repro.launch.tune --platform wordcount \
-        --strategy tpe --budget 48 --jobs 4 --cache results/eval_cache.jsonl
+        --strategy tpe --budget 48 --jobs 4 --study results/studies/wc
+
+The legacy ``--cache``/``--log`` pair still works for ad-hoc runs without a
+study directory.
 """
 import os
 
@@ -33,43 +36,96 @@ from pathlib import Path
 
 from repro.configs.base import SHAPES
 from repro.configs.archs import ARCH_NAMES, get_arch
-from repro.core import SPACES, tune
+from repro.core import SPACES, EngineConfig, Study
 from repro.core.evaluators import RooflineEvaluator
 
 
 def add_engine_args(ap: argparse.ArgumentParser):
-    """Engine knobs shared by every driver that runs the TrialScheduler."""
-    ap.add_argument("--jobs", type=int, default=1,
-                    help="parallel trials per batch (thread pool)")
+    """Engine knobs shared by every driver that runs the TrialScheduler.
+    They populate one validated EngineConfig (see ``engine_config``)."""
+    ap.add_argument("--study", type=Path, default=None,
+                    help="Study directory owning cache + log + session "
+                         "provenance (created on first use; replaces the "
+                         "ad-hoc --cache/--log pair)")
+    # engine flags default to None (= "not given") so an explicitly-typed
+    # value — even one equal to the engine default, like --jobs 1 — is
+    # distinguishable and can override a persistent study's stored engine
+    ap.add_argument("--jobs", type=int, default=None,
+                    help="parallel trials per batch (thread pool; default 1)")
     ap.add_argument("--batch", type=int, default=None,
                     help="max configs per ask() batch (default: whole phase)")
     ap.add_argument("--cache", type=Path, default=None,
-                    help="persistent JSONL evaluation cache shared across runs")
+                    help="persistent JSONL evaluation cache shared across "
+                         "runs (ignored when --study is given)")
     ap.add_argument("--patience", type=int, default=None,
                     help="stop when best hasn't improved in N batches")
     ap.add_argument("--trial-timeout", "--timeout", dest="trial_timeout",
                     type=float, default=None,
                     help="per-trial timeout in seconds (timeout => infeasible; "
                          "hard SIGKILL under --isolation subprocess)")
-    ap.add_argument("--retries", type=int, default=0,
-                    help="per-trial retries before recording a failure")
-    ap.add_argument("--isolation", default="inline",
+    ap.add_argument("--retries", type=int, default=None,
+                    help="per-trial retries before recording a failure "
+                         "(default 0)")
+    ap.add_argument("--isolation", default=None,
                     choices=["inline", "subprocess"],
                     help="trial execution backend: inline threads (soft "
-                         "timeouts) or worker processes (hard deadlines, "
-                         "crash containment, warm reuse)")
+                         "timeouts, the default) or worker processes (hard "
+                         "deadlines, crash containment, warm reuse)")
 
 
-def engine_kwargs(args) -> dict:
-    return dict(
-        max_workers=args.jobs,
-        batch_size=args.batch,
-        cache_path=args.cache,
-        patience=args.patience,
-        timeout_s=args.trial_timeout,
-        retries=args.retries,
-        isolation=args.isolation,
-    )
+def roofline_platform_key(platform: str, arch: str, shape: str,
+                          chips: int) -> str:
+    """Per-cell cache namespace (same discipline as Study.cell), with the
+    chip count baked in when non-default — runs against different topologies
+    must never replay each other's cached measurements."""
+    key = f"{platform}/{arch}:{shape}"
+    return key if chips == 256 else f"{key}@{chips}c"
+
+
+def engine_overrides(args) -> dict:
+    """EngineConfig fields for exactly the engine flags the user typed."""
+    flag_to_field = {
+        "jobs": "workers",
+        "isolation": "isolation",
+        "trial_timeout": "timeout_s",
+        "retries": "retries",
+        "patience": "patience",
+        "batch": "batch_size",
+    }
+    return {
+        field: getattr(args, flag)
+        for flag, field in flag_to_field.items()
+        if getattr(args, flag, None) is not None
+    }
+
+
+def engine_config(args) -> EngineConfig:
+    """One validated EngineConfig from the CLI engine flags (engine defaults
+    fill anything the user didn't type)."""
+    return EngineConfig(**engine_overrides(args))
+
+
+def open_persistent_study(path: Path, overrides: dict) -> Study:
+    """Open (or create) the study at ``path``, overlaying exactly the engine
+    flags the CLI user typed onto the study's stored engine — an untyped
+    flag never resets a stored knob (e.g. hard subprocess deadlines the
+    study was configured with), while an explicit flag always wins, even at
+    its default value. Shared by every ``--study``-taking driver."""
+    if (Path(path) / Study.MANIFEST).exists():
+        study = Study.load(path)
+        if overrides:
+            study.engine = study.engine.replace(**overrides)
+        return study
+    return Study.create(path, engine=EngineConfig(**overrides))
+
+
+def open_study(args, engine: EngineConfig) -> Study:
+    """``--study DIR`` opens (or creates) a persistent Study; without it an
+    in-memory Study wraps the legacy --cache/--log files."""
+    if args.study:
+        return open_persistent_study(args.study, engine_overrides(args))
+    return Study(engine=engine, cache_path=args.cache,
+                 log_path=getattr(args, "log", None))
 
 
 def main(argv=None):
@@ -87,13 +143,14 @@ def main(argv=None):
     ap.add_argument("--k", type=int, default=4, help="crs survivors")
     ap.add_argument("--rounds", type=int, default=4)
     ap.add_argument("--budget", type=int, default=48,
-                    help="tpe total trial budget (cache history counts toward it)")
+                    help="tpe total trial budget (study history counts toward it)")
     ap.add_argument("--startup", type=int, default=None,
                     help="tpe random trials before the first model round")
     ap.add_argument("--round-size", type=int, default=8,
                     help="tpe proposals per acquisition round (size --jobs to this)")
     ap.add_argument("--seed", type=int, default=0, help="crs/tpe rng seed")
-    ap.add_argument("--log", type=Path, default=Path("results/tune_log.jsonl"))
+    ap.add_argument("--log", type=Path, default=Path("results/tune_log.jsonl"),
+                    help="trial log (ignored when --study is given)")
     ap.add_argument("--out", type=Path, default=None, help="write best config JSON")
     add_engine_args(ap)
     args = ap.parse_args(argv)
@@ -103,6 +160,7 @@ def main(argv=None):
 
         evaluator = make_evaluator()
         space = WORDCOUNT_SPACE
+        platform_key = args.platform
         active = args.active or ["replication", "block_tokens", "num_map_tasks"]
     else:
         arch = get_arch(args.arch)
@@ -111,26 +169,34 @@ def main(argv=None):
             raise SystemExit(f"{args.shape} skipped for {args.arch} (DESIGN.md §6)")
         space = SPACES[args.platform]
         evaluator = RooflineEvaluator(arch, shape, space, chips=args.chips)
+        # per-cell (and per-topology) namespace in the shared cache: a
+        # different arch/shape/chips must never replay this cell's records
+        platform_key = roofline_platform_key(
+            args.platform, args.arch, args.shape, args.chips)
         active = args.active or list(space.most_influential)
 
+    budget = None
     if args.algorithm == "gsft":
-        kwargs = dict(active_params=active, samples_per_param=args.samples)
+        kwargs = dict(samples_per_param=args.samples)
     elif args.algorithm == "crs":
         kwargs = dict(m=args.m, k=args.k, max_rounds=args.rounds, seed=args.seed)
-    else:  # tpe — warm-starts its observation history from --cache on re-runs
-        kwargs = dict(max_trials=args.budget, n_startup=args.startup,
-                      round_size=args.round_size, seed=args.seed)
+    else:  # tpe — warm-starts its observation history from the study on re-runs
+        budget = args.budget
+        kwargs = dict(n_startup=args.startup, round_size=args.round_size,
+                      seed=args.seed)
     # the real platform name namespaces the persistent cache — wordcount
     # records must never alias the roofline "train" platform's
-    outcome = tune(
-        args.platform,
-        args.algorithm,
-        evaluator,
-        space=space,
-        log_path=args.log,
-        **engine_kwargs(args),
-        **kwargs,
-    )
+    study = open_study(args, engine_config(args))
+    with study:
+        outcome = study.optimize(
+            platform_key,
+            args.algorithm,
+            evaluator,
+            space=space,
+            budget=budget,
+            active_params=active if args.algorithm == "gsft" else None,
+            **kwargs,
+        )
     print(json.dumps(outcome.summary(), indent=1, default=str))
     if args.out:
         args.out.parent.mkdir(parents=True, exist_ok=True)

@@ -1,0 +1,109 @@
+"""Study resume smoke (the CI ``study-resume`` job — not a pytest module).
+
+Scenario: start a Study tuning run in a child process, SIGINT it mid-batch,
+then ``Study.resume()`` in this process and assert that the total paid
+evaluations (trials persisted before the kill + fresh trials paid by the
+resume) equal those of a single uninterrupted run — i.e. an interruption
+loses nothing and double-pays nothing.
+
+    PYTHONPATH=src python tests/study_resume_smoke.py
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+from repro.core import Study  # noqa: E402
+from repro.core.evaluators import FunctionEvaluator  # noqa: E402
+from repro.core.scheduler import iter_jsonl  # noqa: E402
+
+CRS_KW = dict(m=6, k=2, max_rounds=3, seed=11)
+
+
+def objective(cfg):
+    return (10.0
+            + abs(cfg["mesh_model_parallel"] - 8) * 0.5
+            + abs((cfg["microbatch_size"] or 256) - 32) * 0.02)
+
+
+def slow_objective(cfg):
+    time.sleep(0.15)  # wide SIGINT window per trial
+    return objective(cfg)
+
+
+def run_child(study_dir: str) -> int:
+    study = Study.open(Path(study_dir))
+    study.optimize("train", "crs", FunctionEvaluator(slow_objective), **CRS_KW)
+    return 0
+
+
+def paid_records(cache: Path) -> int:
+    """Complete (parseable) persisted trial records — the evaluations the
+    interrupted session already paid for. iter_jsonl applies the engine's
+    own torn-tail tolerance, so a record torn by the SIGINT is not counted
+    (it is not replayable either)."""
+    return len(iter_jsonl(cache))
+
+
+def main() -> int:
+    if len(sys.argv) > 1 and sys.argv[1] == "--child":
+        return run_child(sys.argv[2])
+
+    tmp = Path(tempfile.mkdtemp(prefix="study-resume-smoke-"))
+    study_dir = tmp / "study"
+
+    # reference: the same seeded session, never interrupted, fresh study
+    ref = Study.create(tmp / "ref").optimize(
+        "train", "crs", FunctionEvaluator(objective), **CRS_KW)
+    ref_total = ref.cache_stats["fresh"]
+    assert ref_total > 6, f"reference run too small to interrupt ({ref_total})"
+
+    # interrupted run: SIGINT the child once >= 4 trials are persisted
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    child = subprocess.Popen(
+        [sys.executable, __file__, "--child", str(study_dir)], env=env)
+    cache = study_dir / "cache.jsonl"
+    deadline = time.time() + 120
+    while time.time() < deadline:
+        if paid_records(cache) >= 4:
+            break
+        if child.poll() is not None:
+            raise SystemExit("child finished before it could be interrupted")
+        time.sleep(0.02)
+    child.send_signal(signal.SIGINT)
+    child.wait(timeout=60)
+    assert child.returncode != 0, "child should have died from the SIGINT"
+
+    paid_before = paid_records(cache)
+    assert 0 < paid_before < ref_total, (paid_before, ref_total)
+
+    # resume: replays everything already paid, pays only the remainder
+    study = Study.load(study_dir)
+    out = study.resume(evaluator=FunctionEvaluator(objective))
+    assert out.cache_stats["cache_hits"] == paid_before, (
+        out.cache_stats, paid_before)
+    assert out.cache_stats["fresh"] == ref_total - paid_before, (
+        out.cache_stats, ref_total, paid_before)
+    assert out.best_config == ref.best_config
+    assert out.best_time == ref.best_time
+
+    print(json.dumps({
+        "reference_evaluations": ref_total,
+        "paid_before_sigint": paid_before,
+        "resume_fresh": out.cache_stats["fresh"],
+        "resume_replayed": out.cache_stats["cache_hits"],
+        "best_time_s": out.best_time,
+    }, indent=1))
+    print("OK: interrupted-then-resumed total == single uninterrupted run")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

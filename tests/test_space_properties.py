@@ -39,7 +39,7 @@ def _is_pow2(v) -> bool:
 
 
 def _check_snap(p, raw):
-    """snap is idempotent and in bounds / in choices."""
+    """snap is idempotent, in bounds / in choices, and on the step grid."""
     s = p.snap(raw)
     assert p.snap(s) == s, (p, raw, s)
     if isinstance(p, CatParam):
@@ -50,6 +50,11 @@ def _check_snap(p, raw):
         assert s == 0 or _is_pow2(s), (p, raw, s)
         if s == 0:
             assert p.lo == 0
+    if isinstance(p, FloatParam) and p.step > 0:
+        # snap quantizes to the step grid anchored at lo (like IntParam);
+        # the only off-grid escape is the hi clamp when a quantum rounds past
+        k = (s - p.lo) / p.step
+        assert s == p.hi or abs(k - round(k)) <= 1e-3, (p, raw, s, k)
 
 
 def _check_grid(p, num):
@@ -78,7 +83,9 @@ def _check_sample_overrides(p, rng, frac_lo, frac_hi):
     v = p.sample(rng, lo2, hi2)
     assert p.lo <= v <= p.hi, (p, lo2, hi2, v)
     if isinstance(p, FloatParam):
-        assert lo2 - 1e-9 <= v <= hi2 + 1e-9, (p, lo2, hi2, v)
+        # step quantization may move a sample up to half a quantum outside
+        slack = p.step / 2 + 1e-9
+        assert lo2 - slack <= v <= hi2 + slack, (p, lo2, hi2, v)
     elif getattr(p, "pow2", False):
         # nearest-pow2 rounding moves a value by < 2x either way
         assert v == 0 or (v >= max(p.lo, lo2 / 2 - 1) and v <= min(p.hi, 2 * hi2 + 1)), \
@@ -145,6 +152,22 @@ def test_property_pow2_snap_returns_powers_of_two(lo, hi, raw):
 @settings(max_examples=150, deadline=None)
 def test_property_float_snap_idempotent_inbounds(lo, width, raw):
     _check_snap(_float_param(lo, width), raw)
+
+
+@given(st.floats(-1e3, 1e3), st.floats(1e-3, 1e3), st.floats(-1e6, 1e6))
+@settings(max_examples=150, deadline=None)
+def test_property_float_snap_respects_step(lo, width, raw):
+    """FloatParam.snap must quantize to the step grid the way IntParam does —
+    CRS/TPE proposals land on the same grid the sweeps (grid_between) walk."""
+    p = _float_param(lo, width)
+    s = p.snap(raw)
+    k = (s - p.lo) / p.step
+    assert s == p.hi or abs(k - round(k)) <= 1e-3, (p, raw, s, k)
+    if s != p.hi:
+        # ...and a value constructed ON the grid is a fixed point (catches a
+        # quantizer anchored anywhere other than lo)
+        on_grid = p.lo + round(k) * p.step
+        assert p.snap(on_grid) == on_grid, (p, raw, s, on_grid)
 
 
 @given(st.integers(1, 5), st.text(min_size=0, max_size=3))

@@ -121,6 +121,11 @@ def main(argv=None):
             rows = tables.table_strategy_shootout("wordcount")
             emit(rows); all_rows += rows
 
+            print("\n## §Cross-cell transfer — WordCount matrix, sibling "
+                  "cell with --transfer off vs prior (equal budgets)")
+            rows = tables.table_transfer()
+            emit(rows); all_rows += rows
+
     print("\n## §Roofline — per (arch × shape) on the 16×16 production mesh "
           "(from the dry-run artifacts)")
     rows = tables.table_roofline()

@@ -10,6 +10,8 @@
   - ``grid_finer`` — Algorithm I wrapper: Grid Search with Finer Tuning (§VIII)
   - ``crs``        — Algorithm II wrapper: Controlled Random Search (§IX)
   - ``study``      — Study: persistent, resumable tuning sessions + EngineConfig
+  - ``transfer``   — cross-cell transfer: sibling histories, cell similarity,
+                     config snapping (the ``--transfer off|warm|prior`` modes)
   - ``tuner``      — the Admin facade (Figure I) — deprecated shim over Study
   - ``evaluators`` — walltime (paper-faithful) / roofline (AOT) backends
   - ``roofline``   — TPU v5e roofline terms from compiled artifacts
@@ -40,6 +42,14 @@ from repro.core.strategies import (
     register_strategy,
 )
 from repro.core.study import EngineConfig, Study, StudyCell, TuneOutcome, run_session
+from repro.core.transfer import (
+    TRANSFER_MODES,
+    CellKey,
+    SiblingHistory,
+    default_similarity,
+    parse_namespace,
+    snap_into_space,
+)
 from repro.core.tuner import tune
 
 __all__ = [
@@ -69,6 +79,12 @@ __all__ = [
     "TrialScheduler",
     "TuneOutcome",
     "TunableSpace",
+    "TRANSFER_MODES",
+    "CellKey",
+    "SiblingHistory",
+    "default_similarity",
+    "parse_namespace",
+    "snap_into_space",
     "best_from_log",
     "config_hash",
     "config_key",

@@ -30,6 +30,7 @@ ICI, 16 GiB HBM. Cross-pod (DCI) hops are modeled at 25 GB/s.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, Optional, Tuple
@@ -318,12 +319,56 @@ def reduced_arch(arch: ArchConfig, n_periods: int) -> ArchConfig:
     return dataclasses.replace(arch, num_layers=period * n_periods)
 
 
+# Cross-cell probe-compile cache: the multi-cell matrix walk (and repeated
+# sessions over the same cell) hit `_compile_cost_probe` with identical
+# (arch, probe RunConfig, shape, mesh) keys — every RooflineEvaluator used to
+# recompile them because its memo is per-instance. The extracted CostTerms
+# are pure functions of the compiled artifact, so one process-wide cache is
+# safe (RooflineEvaluator is parallel_safe=False — the scheduler serializes
+# access; subprocess workers each own a process-local copy).
+_PROBE_COSTS: Dict[Tuple, CostTerms] = {}
+_PROBE_COSTS_LOCK = threading.Lock()
+
+
+def _probe_cache_key(arch, probe_run, shape, mesh, make_step_fn) -> Tuple:
+    # the step builder is keyed by OBJECT, not by name: two distinct
+    # closures can share a __qualname__ while building different programs,
+    # and the cache entry holding the reference keeps the id stable
+    return (
+        arch,
+        probe_run,
+        shape,
+        tuple(mesh.axis_names),
+        tuple(mesh.devices.shape),
+        make_step_fn,
+    )
+
+
+def probe_cache_stats() -> Dict[str, int]:
+    return {"entries": len(_PROBE_COSTS)}
+
+
+def clear_probe_cache() -> None:
+    with _PROBE_COSTS_LOCK:
+        _PROBE_COSTS.clear()
+
+
 def _compile_cost_probe(arch, run, shape, mesh, make_step_fn, microbatch=0) -> CostTerms:
-    """Loop-free compile of a reduced cell; returns per-device costs."""
+    """Loop-free compile of a reduced cell; returns per-device costs.
+    Identical probes — same (arch, probe RunConfig, shape, mesh topology,
+    step builder) — are compiled once per process."""
     probe_run = run.replace(scan_layers=False, microbatch_size=microbatch)
+    key = _probe_cache_key(arch, probe_run, shape, mesh, make_step_fn)
+    with _PROBE_COSTS_LOCK:
+        hit = _PROBE_COSTS.get(key)
+    if hit is not None:
+        return hit
     bundle = make_step_fn(arch, probe_run, shape, mesh)
     compiled = bundle.lower().compile()
-    return extract_costs(compiled)
+    costs = extract_costs(compiled)
+    with _PROBE_COSTS_LOCK:
+        _PROBE_COSTS[key] = costs
+    return costs
 
 
 def extrapolated_costs(

@@ -323,20 +323,32 @@ class TrialScheduler:
         stats["evaluations"] = stats.pop("trials")
         return stats
 
-    def cached_observations(self) -> List[Tuple[Dict[str, Any], float, Any]]:
+    def cached_observations(
+        self, with_platform: bool = False
+    ) -> List[Tuple[Any, ...]]:
         """``(config, time_s, tag)`` triples from the persistent cache, this
         platform only, in file order — the warm-start history a model-based
         strategy (TPE) seeds its observation set from on resume. The tag
         carries provenance: a strategy charges only its *own* records against
         its trial budget and treats the rest as free model observations.
         Persisted timeout records are excluded — an over-deadline measurement
-        must not feed a density model as if it were a clean observation."""
-        return [
-            (dict(rec["config"]), float(rec["time_s"]), rec.get("tag"))
-            for rec in self._persistent.values()
-            if "config" in rec and "time_s" in rec
-            and rec.get("status", "ok") == "ok"
-        ]
+        must not feed a density model as if it were a clean observation.
+
+        ``with_platform=True`` appends each record's **stored** cell
+        namespace as a fourth element. The stored namespace is the record's
+        identity, not this scheduler's view of it: a legacy record with no
+        platform field matched this scheduler's filter by default and reads
+        back as ``None`` — callers bucketing records per cell (the cross-cell
+        ``Study.histories_for``) must never attribute it to a real cell."""
+        out: List[Tuple[Any, ...]] = []
+        for rec in self._persistent.values():
+            if "config" not in rec or "time_s" not in rec:
+                continue
+            if rec.get("status", "ok") != "ok":
+                continue
+            row = (dict(rec["config"]), float(rec["time_s"]), rec.get("tag"))
+            out.append(row + (rec.get("platform"),) if with_platform else row)
+        return out
 
     # ------------------------------------------------------------- execution
 
@@ -534,6 +546,28 @@ def _load_cache(path: Path, platform: str) -> Dict[str, Dict[str, Any]]:
         rec["key"]: rec for rec in iter_jsonl(path)
         if rec.get("platform", platform) == platform and "key" in rec
     }
+
+
+def read_cache_by_platform(path: Path) -> Dict[str, Dict[str, Dict[str, Any]]]:
+    """One pass over a shared evaluation cache, grouped by each record's
+    **stored** platform namespace: ``{namespace: {key: record}}``.
+
+    This is the cross-cell read under ``Study.histories_for``: grouping is by
+    the namespace string the record was *written* with, so ``train/a:s`` and
+    its ``train/a:s@512c`` chip-count variant land in separate buckets
+    (PR-4's topology keying), and legacy records with no platform field —
+    which ``_load_cache`` would have matched against ANY platform — are
+    collected under ``""`` rather than attributed to a real cell. Per bucket,
+    the last record per key wins but keeps its first-write position, so a
+    bucket's iteration order is the append order the sibling session produced
+    (resume replays a recorded prefix of it)."""
+    grouped: Dict[str, Dict[str, Dict[str, Any]]] = {}
+    for rec in iter_jsonl(path):
+        if "key" not in rec:
+            continue
+        ns = rec.get("platform") or ""
+        grouped.setdefault(ns, {})[rec["key"]] = rec
+    return grouped
 
 
 def read_log(path: Path, platform: Optional[str] = None) -> List[Dict[str, Any]]:

@@ -49,6 +49,16 @@ class QueueStrategy:
     # observation history (via on_study_attach, or a legacy ``history``
     # constructor kwarg if the hook is not overridden)
     supports_history = False
+    # strategies set True to receive sibling-cell histories through the
+    # ``siblings=`` channel of on_study_attach (the cross-cell transfer
+    # seam) — the engine only passes the transfer kwargs to strategies that
+    # declare it, so legacy single-argument hooks keep working
+    supports_transfer = False
+    # which transfer modes the strategy actually implements; a requested
+    # mode outside this set is downgraded to the last supported one and the
+    # session records the EFFECTIVE mode (asking gsft for "prior" runs — and
+    # reports — its "warm" seeding, never a prior that doesn't exist)
+    transfer_modes: tuple = ()
     # name of the constructor kwarg that Study.optimize(budget=N) maps onto
     # (e.g. TPE's "max_trials"); None = the strategy has no trial budget
     budget_kwarg: Optional[str] = None
@@ -58,13 +68,28 @@ class QueueStrategy:
         self._outstanding = 0
         self._finished = False
 
-    def on_study_attach(self, history: Sequence[Any]) -> None:
+    def on_study_attach(
+        self,
+        history: Sequence[Any],
+        siblings: Optional[Sequence[Any]] = None,
+        transfer: str = "off",
+    ) -> None:
         """Sanctioned seam for study/cross-session state: ``history`` is the
         prior ``(config, time_s[, tag])`` observations from the study's
         persistent cache (this platform only, file order). Called once,
         after construction and before the first ``ask`` — a warm-starting
-        strategy (TPE) or a cross-cell transfer prior ingests it here
-        instead of reaching into scheduler internals. Default: ignore."""
+        strategy (TPE) ingests it here instead of reaching into scheduler
+        internals.
+
+        ``siblings`` is the cross-cell transfer channel: a ranked sequence of
+        :class:`~repro.core.transfer.SiblingHistory` records (closest cell
+        first) that ``Study``/``run_session`` feed when a session runs with
+        ``transfer != "off"`` — and only to strategies that declare
+        ``supports_transfer``. ``transfer`` names the mode the caller asked
+        for (``"warm"``: seed initial candidates from sibling incumbents;
+        ``"prior"``: ingest sibling observations as a discounted model
+        prior). Sibling evidence must NEVER count toward a strategy's trial
+        budget. Default: ignore everything."""
         return None
 
     @property

@@ -40,6 +40,15 @@ def _random_config(space, bounds, frozen, rng) -> Dict[str, Any]:
 
 @register_strategy("crs")
 class CRSStrategy(QueueStrategy):
+    """Cross-cell transfer (``supports_transfer``) is the cheap ``warm``
+    mode: sibling incumbents, snapped into this cell's space, join round 0's
+    draws — a transferring optimum survives the round and pulls the bound
+    contraction toward itself; a non-transferring one is just one more draw
+    that the survivor cut discards."""
+
+    supports_transfer = True
+    transfer_modes = ("warm",)
+
     def __init__(
         self,
         space: TunableSpace,
@@ -74,6 +83,19 @@ class CRSStrategy(QueueStrategy):
 
         self.tag = "crs/round0"
         self._pending = self._draw_round()
+
+    def on_study_attach(self, history, siblings=None, transfer="off") -> None:
+        """Warm transfer: sibling incumbents (snapped into this space) are
+        prepended to round 0. The rng draw stream is untouched — the round's
+        random draws are already pending — so a seeded run with and without
+        siblings explores the same random configs plus the seeds."""
+        if transfer == "off" or not siblings:
+            return
+        from repro.core.transfer import warm_seed_configs
+
+        self._pending = warm_seed_configs(
+            self.space, self.fixed, siblings, self._pending
+        ) + self._pending
 
     def _draw_round(self) -> List[Dict[str, Any]]:
         return [

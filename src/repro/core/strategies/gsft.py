@@ -36,7 +36,16 @@ def _param_grid_list(param_grid: Dict[str, List[Any]]) -> List[Dict[str, Any]]:
 class GridFinerStrategy(QueueStrategy):
     """Phase 1: evenly-stepped coarse grid over the active knobs. Phase 2:
     the paper's finer window around the phase-1 optimum along the
-    most-influential knobs, everything else pinned."""
+    most-influential knobs, everything else pinned.
+
+    Cross-cell transfer (``supports_transfer``) is the cheap ``warm`` mode:
+    sibling incumbents, snapped into this cell's space, are prepended to the
+    phase-1 grid — if a sibling's optimum transfers, it wins phase 1 and the
+    finer window contracts around it; if not, the full grid still runs, so
+    the sweep is never worse than untransferred."""
+
+    supports_transfer = True
+    transfer_modes = ("warm",)
 
     def __init__(
         self,
@@ -71,6 +80,19 @@ class GridFinerStrategy(QueueStrategy):
         self._min_time = INFEASIBLE
         self._phase1_best: Optional[Dict[str, Any]] = None
         self._phase1_time = INFEASIBLE
+
+    def on_study_attach(self, history, siblings=None, transfer="off") -> None:
+        """Warm transfer: prepend each sibling's incumbent (snapped into this
+        space) to the phase-1 candidate set. History is ignored — the grid is
+        exhaustive by design and the scheduler's cache already replays
+        repeated cells for free."""
+        if transfer == "off" or not siblings:
+            return
+        from repro.core.transfer import warm_seed_configs
+
+        self._pending = warm_seed_configs(
+            self.space, self.fixed, siblings, self._pending
+        ) + self._pending
 
     # -- QueueStrategy hooks
 

@@ -60,6 +60,8 @@ class TPEResult:
     warm_started: int = 0  # observations seeded from the persistent cache
     timeouts: int = 0
     stopped_early: bool = False
+    transfer_mode: str = "off"  # off | warm | prior (cross-cell siblings)
+    sibling_observations: int = 0  # prior points ingested — NEVER budget-charged
 
 
 # ------------------------------------------------------------- kernel densities
@@ -68,9 +70,21 @@ class TPEResult:
 class _NumericDensity:
     """Parzen estimator for an Int/Float param: a mixture of Gaussians at the
     observed values plus one uniform prior component over the bounds. ``pow2``
-    params with lo >= 1 live in log2 space."""
+    params with lo >= 1 live in log2 space.
 
-    def __init__(self, param: Param, values: Sequence[Any], prior_weight: float = 1.0):
+    ``weights`` (default: all 1.0) scale each observation's mass in the
+    mixture — the cross-cell transfer prior feeds sibling observations with a
+    distance-decayed weight < 1, so near-cell evidence shapes the density
+    strongly and far-cell evidence barely at all, while the local cell's own
+    observations keep full weight."""
+
+    def __init__(
+        self,
+        param: Param,
+        values: Sequence[Any],
+        prior_weight: float = 1.0,
+        weights: Optional[Sequence[float]] = None,
+    ):
         self.param = param
         self.log2 = bool(getattr(param, "pow2", False)) and param.lo >= 1
         lo, hi = float(param.lo), float(param.hi)
@@ -79,11 +93,16 @@ class _NumericDensity:
         self.lo, self.hi = lo, hi
         self.width = max(hi - lo, 1e-9)
         self.points = [self._fwd(v) for v in values]
-        # bandwidth shrinks as evidence accumulates, floored so late rounds
-        # still explore the step/pow2 neighbourhood
-        self.sigma = max(self.width / max(len(self.points), 1), self.width * 0.08)
+        self.weights = (
+            [1.0] * len(self.points) if weights is None else
+            [max(float(w), 0.0) for w in weights]
+        )
+        self.mass = sum(self.weights)
+        # bandwidth shrinks as (weighted) evidence accumulates, floored so
+        # late rounds still explore the step/pow2 neighbourhood
+        self.sigma = max(self.width / max(self.mass, 1), self.width * 0.08)
         self.prior_weight = prior_weight
-        self.total = len(self.points) + prior_weight
+        self.total = self.mass + prior_weight
 
     def _fwd(self, v) -> float:
         v = float(v)
@@ -94,27 +113,46 @@ class _NumericDensity:
         if r < self.prior_weight or not self.points:
             x = self.lo + rng.random() * self.width
         else:
-            mu = self.points[int(rng.random() * len(self.points)) % len(self.points)]
+            # a dedicated draw picks the mixture component: with unit weights
+            # this selects points[int(r2)] — byte-identical rng consumption
+            # to the unweighted implementation, so pre-transfer seeded
+            # studies replay the same proposal stream
+            r2 = rng.random() * max(self.mass, 1e-12)
+            mu = self.points[-1]
+            for point, w in zip(self.points, self.weights):
+                if r2 < w:
+                    mu = point
+                    break
+                r2 -= w
             x = rng.gauss(mu, self.sigma)
         return self.param.snap(2.0 ** x if self.log2 else x)
 
     def logpdf(self, v) -> float:
         x = self._fwd(v)
         dens = self.prior_weight / self.width
-        for mu in self.points:
+        for mu, w in zip(self.points, self.weights):
             z = (x - mu) / self.sigma
-            dens += math.exp(-0.5 * z * z) / (self.sigma * _SQRT_2PI)
+            dens += w * math.exp(-0.5 * z * z) / (self.sigma * _SQRT_2PI)
         return math.log(dens / self.total)
 
 
 class _CategoricalDensity:
-    """Laplace-smoothed categorical over a CatParam's choices."""
+    """Laplace-smoothed categorical over a CatParam's choices; observation
+    ``weights`` discount sibling-cell evidence like in _NumericDensity."""
 
-    def __init__(self, param: CatParam, values: Sequence[Any], prior_weight: float = 1.0):
+    def __init__(
+        self,
+        param: CatParam,
+        values: Sequence[Any],
+        prior_weight: float = 1.0,
+        weights: Optional[Sequence[float]] = None,
+    ):
         self.param = param
+        if weights is None:
+            weights = [1.0] * len(values)
         counts = {c: prior_weight for c in param.choices}
-        for v in values:
-            counts[param.snap(v)] += 1.0
+        for v, w in zip(values, weights):
+            counts[param.snap(v)] += max(float(w), 0.0)
         total = sum(counts.values())
         self.choices = list(param.choices)
         self.probs = [counts[c] / total for c in self.choices]
@@ -133,10 +171,15 @@ class _CategoricalDensity:
         return math.log(self.probs[self.choices.index(v)])
 
 
-def _density(param: Param, values: Sequence[Any], prior_weight: float):
+def _density(
+    param: Param,
+    values: Sequence[Any],
+    prior_weight: float,
+    weights: Optional[Sequence[float]] = None,
+):
     if param.numeric:
-        return _NumericDensity(param, values, prior_weight)
-    return _CategoricalDensity(param, values, prior_weight)
+        return _NumericDensity(param, values, prior_weight, weights)
+    return _CategoricalDensity(param, values, prior_weight, weights)
 
 
 # ------------------------------------------------------------------- strategy
@@ -156,10 +199,20 @@ class TPEStrategy(QueueStrategy):
                      (tpe-tagged or untagged) entries are budget-charged,
                      foreign-strategy entries are free model evidence
       seed           rng seed — the proposed-config stream is a pure function
-                     of (seed, told results), independent of batch size
+                     of (seed, told results, siblings), independent of batch
+                     size
+      transfer_weight  scale on the distance-decayed sibling weights of the
+                     cross-cell transfer prior (1.0 = exp(-distance))
+      transfer_ramp  local observations over which the sibling prior fades
+                     linearly to zero (default 2×n_startup) — late rounds are
+                     pure local TPE, so a misleading sibling (the outlier
+                     cell) costs a bounded number of early proposals, never
+                     the whole budget
     """
 
     supports_history = True  # Study/tuner feed the persistent eval cache in
+    supports_transfer = True  # on_study_attach takes the siblings= channel
+    transfer_modes = ("warm", "prior")
     budget_kwarg = "max_trials"  # Study.optimize(budget=N) maps here
 
     def __init__(
@@ -175,6 +228,8 @@ class TPEStrategy(QueueStrategy):
         prior_weight: float = 1.0,
         seed: int = 0,
         history: Optional[Sequence[Tuple[Dict[str, Any], float]]] = None,
+        transfer_weight: float = 1.0,
+        transfer_ramp: Optional[int] = None,
     ):
         super().__init__()
         import random
@@ -186,10 +241,15 @@ class TPEStrategy(QueueStrategy):
         self.n_candidates = max(1, int(n_candidates))
         self.round_size = max(1, int(round_size))
         self.prior_weight = float(prior_weight)
+        self.transfer_weight = float(transfer_weight)
         self._seed = seed
         self.rng = random.Random(seed)
         self.n_startup = int(n_startup) if n_startup is not None else min(
             10, max(4, self.max_trials // 4)
+        )
+        self.transfer_ramp = (
+            int(transfer_ramp) if transfer_ramp is not None
+            else 2 * self.n_startup
         )
 
         self._free = [p for p in space.params if p.name not in self.fixed]
@@ -199,17 +259,38 @@ class TPEStrategy(QueueStrategy):
         self._best_time = float("inf")
         self._rounds = 0
         self.warm_started = 0
+        # cross-cell transfer state (set by on_study_attach):
+        self.transfer_mode = "off"
+        # prior mode: sibling (config, weight) points pre-split into good/bad
+        # by each sibling's OWN objective quantile — sibling times live on a
+        # different cell's scale, so they must never be ranked against local
+        # times, only donate density mass
+        self._sibling_good: List[Tuple[Dict[str, Any], float]] = []
+        self._sibling_bad: List[Tuple[Dict[str, Any], float]] = []
+        # warm mode: sibling incumbents snapped into this space, closest
+        # sibling first — consumed as the first startup proposals
+        self._seed_configs: List[Dict[str, Any]] = []
 
         self.tag = "tpe/startup"
         self.on_study_attach(history or ())
 
-    def on_study_attach(self, history) -> None:
-        """Warm-start seam (the Strategy protocol's study hook): ingest prior
-        ``(config, time_s[, tag])`` observations, then recompute the pending
-        proposals — the proposal stream is a pure function of
-        ``(seed, observations)``, so attaching history after construction is
-        byte-identical to passing it to the constructor. Must run before the
-        first ``ask``."""
+    def on_study_attach(self, history, siblings=None, transfer="off") -> None:
+        """Warm-start + transfer seam (the Strategy protocol's study hook):
+        ingest prior ``(config, time_s[, tag])`` observations and optional
+        sibling-cell histories, then recompute the pending proposals — the
+        proposal stream is a pure function of ``(seed, observations,
+        siblings)``, so attaching after construction is byte-identical to
+        passing everything to the constructor. Must run before the first
+        ``ask``.
+
+        ``siblings`` (:class:`~repro.core.transfer.SiblingHistory` records,
+        closest first) are ingested per ``transfer``: ``"prior"`` adds every
+        sibling observation to the Parzen densities with the sibling's
+        distance-decayed weight, pre-split by the sibling's own good/bad
+        quantile; ``"warm"`` seeds the startup batch with each sibling's
+        incumbent. Either way sibling evidence is free — it never counts
+        toward ``max_trials`` and never marks a config as already-proposed.
+        """
         if self._outstanding:
             raise RuntimeError(
                 "on_study_attach must be called before trials are in flight"
@@ -228,10 +309,46 @@ class TPEStrategy(QueueStrategy):
             charged = tag is None or str(tag).startswith("tpe")
             self._record(full, t, charged=charged)
         self.warm_started = len(self._observations)
+        if siblings is not None:
+            self._ingest_siblings(siblings, transfer)
         self.rng = random.Random(self._seed)
         self._finished = False
         self._pending = []
         self._refill()
+
+    def _ingest_siblings(self, siblings, transfer: str) -> None:
+        self._sibling_good, self._sibling_bad = [], []
+        self._seed_configs = []
+        self.transfer_mode = "off"
+        if transfer == "off" or not siblings:
+            return
+        self.transfer_mode = transfer
+        seed_seen = set()
+        for sib in siblings:
+            w = self.transfer_weight * math.exp(-float(sib.distance))
+            if w <= 1e-6:
+                continue
+            local: List[Tuple[Dict[str, Any], float]] = []
+            for entry in sib.trials:
+                full = self._canon(entry[0])
+                if full is not None and math.isfinite(float(entry[1])):
+                    local.append((full, float(entry[1])))
+            if not local:
+                continue
+            if transfer == "prior":
+                good, bad = self._split([(c, t, w) for c, t in local])
+                self._sibling_good += good
+                self._sibling_bad += bad
+            else:  # warm: the sibling's incumbent seeds the startup batch
+                inc = min(local, key=lambda ct: ct[1])[0]
+                key = config_key(inc)
+                if key not in seed_seen:
+                    seed_seen.add(key)
+                    self._seed_configs.append(dict(inc))
+
+    @property
+    def sibling_observations(self) -> int:
+        return len(self._sibling_good) + len(self._sibling_bad)
 
     # ------------------------------------------------------------ bookkeeping
 
@@ -274,13 +391,32 @@ class TPEStrategy(QueueStrategy):
         if remaining <= 0:
             self._finished = True
             return
-        n_obs = len(self._observations)  # any evidence defuses random startup
+        # any local evidence defuses random startup; sibling prior points do
+        # too, but only down to a floor of genuinely local random trials — a
+        # misleading sibling (outlier cell) must not strip the cell of ALL
+        # exploration of its own objective
+        n_local = len(self._observations)
+        if self.sibling_observations:
+            floor = min(self.n_startup, max(2, self.n_startup // 3))
+            n_obs = n_local + min(
+                self.sibling_observations, max(0, self.n_startup - floor)
+            )
+        else:
+            n_obs = n_local
         if n_obs < self.n_startup:
             k = min(remaining, self.n_startup - n_obs)
             self.tag = "tpe/startup"
             seen = {config_key(c) for c, _ in self._observations}
             batch: List[Dict[str, Any]] = []
-            for _ in range(k):
+            # warm transfer: sibling incumbents go first (they ARE proposals —
+            # evaluated in this cell and budget-charged like any other)
+            while self._seed_configs and len(batch) < k:
+                cfg = self._seed_configs.pop(0)
+                if config_key(cfg) in seen:
+                    continue
+                seen.add(config_key(cfg))
+                batch.append(cfg)
+            while len(batch) < k:
                 cfg = self._random_config(seen)
                 seen.add(config_key(cfg))
                 batch.append(cfg)
@@ -305,32 +441,53 @@ class TPEStrategy(QueueStrategy):
         return max(finite) if finite else 1.0
 
     def _split(
-        self, obs: List[Tuple[Dict[str, Any], float]]
-    ) -> Tuple[List[Dict[str, Any]], List[Dict[str, Any]]]:
+        self, obs: List[Tuple[Dict[str, Any], float, float]]
+    ) -> Tuple[List[Tuple[Dict[str, Any], float]], List[Tuple[Dict[str, Any], float]]]:
+        """Rank ``(config, time, weight)`` triples by time and split at the
+        ``gamma`` quantile, keeping each observation's density weight
+        attached: ``([(config, weight)...] good, [...] bad)``."""
         ranked = sorted(obs, key=lambda ct: ct[1])  # stable: insertion order ties
         n_good = max(1, min(len(ranked) - 1, int(math.ceil(self.gamma * len(ranked)))))
-        return [c for c, _ in ranked[:n_good]], [c for c, _ in ranked[n_good:]]
+        return (
+            [(c, w) for c, _, w in ranked[:n_good]],
+            [(c, w) for c, _, w in ranked[n_good:]],
+        )
 
     def _propose_round(self, k: int) -> List[Dict[str, Any]]:
         """k EI-ranked proposals; each one conditions the next via a constant
         lie at the worst observed objective (in-flight configs fall into the
-        bad density, so l/g repels repeats — batch diversity)."""
+        bad density, so l/g repels repeats — batch diversity). Sibling prior
+        points join the good/bad densities with their distance-decayed
+        weights but are split by their OWN cell's quantile, never ranked
+        against local times."""
         lie = self._worst_finite()
         lies: List[Tuple[Dict[str, Any], float]] = []
         seen = {config_key(c) for c, _ in self._observations}
         out: List[Dict[str, Any]] = []
+        # the sibling prior fades linearly as local evidence accumulates:
+        # full strength with zero local observations, gone at transfer_ramp —
+        # a misleading sibling costs early proposals, never the whole budget
+        fade = max(
+            0.0, 1.0 - len(self._observations) / max(self.transfer_ramp, 1)
+        )
+        sib_good = [(c, w * fade) for c, w in self._sibling_good if w * fade > 0]
+        sib_bad = [(c, w * fade) for c, w in self._sibling_bad if w * fade > 0]
         for _ in range(k):
-            good, bad = self._split(self._observations + lies)
-            cfg = self._sample_ei(good, bad, seen)
+            local = [(c, t, 1.0) for c, t in self._observations] + \
+                    [(c, t, 1.0) for c, t in lies]
+            good, bad = self._split(local)
+            cfg = self._sample_ei(good + sib_good, bad + sib_bad, seen)
             seen.add(config_key(cfg))
             lies.append((cfg, lie))
             out.append(cfg)
         return out
 
     def _sample_ei(self, good, bad, seen) -> Dict[str, Any]:
-        l_dens = {p.name: _density(p, [c[p.name] for c in good], self.prior_weight)
+        l_dens = {p.name: _density(p, [c[p.name] for c, _ in good],
+                                   self.prior_weight, [w for _, w in good])
                   for p in self._free}
-        g_dens = {p.name: _density(p, [c[p.name] for c in bad], self.prior_weight)
+        g_dens = {p.name: _density(p, [c[p.name] for c, _ in bad],
+                                   self.prior_weight, [w for _, w in bad])
                   for p in self._free}
         novel_best, novel_score = None, -math.inf
         for _ in range(self.n_candidates):
@@ -357,4 +514,6 @@ class TPEStrategy(QueueStrategy):
             evaluations=0,  # stamped by TrialScheduler.run
             n_observations=len(self._observations),
             warm_started=self.warm_started,
+            transfer_mode=self.transfer_mode,
+            sibling_observations=self.sibling_observations,
         )

@@ -35,10 +35,22 @@ from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Any, Dict, List, Optional, Sequence
 
-from repro.core.scheduler import TrialScheduler, iter_jsonl, read_log
+from repro.core.scheduler import (
+    TrialScheduler,
+    iter_jsonl,
+    read_cache_by_platform,
+    read_log,
+)
 from repro.core.space import SPACES, TunableSpace
 from repro.core.strategies import STRATEGIES, make_strategy
 from repro.core.strategies.base import QueueStrategy
+from repro.core.transfer import (
+    TRANSFER_MODES,
+    SiblingHistory,
+    Similarity,
+    default_similarity,
+    parse_namespace,
+)
 
 __all__ = ["EngineConfig", "Study", "StudyCell", "TuneOutcome", "run_session"]
 
@@ -173,6 +185,8 @@ def run_session(
     active_params: Optional[Sequence[str]] = None,
     batch_size: Optional[int] = None,
     patience: Optional[int] = None,
+    siblings: Optional[Sequence[SiblingHistory]] = None,
+    transfer: str = "off",
     **algo_kwargs,
 ) -> TuneOutcome:
     """One tuning session on an already-configured scheduler: measure the
@@ -181,7 +195,17 @@ def run_session(
     This is the engine path under :meth:`Study.optimize` and the
     ``tuner.tune`` shim; share one scheduler across calls to share its memo
     and persistent cache (the multi-cell driver does).
+
+    ``siblings``/``transfer`` is the cross-cell channel: when ``transfer``
+    is not ``"off"`` and the strategy declares ``supports_transfer``, the
+    sibling histories ride into ``on_study_attach`` alongside the cached
+    history (``Study._run_session`` computes them via
+    :meth:`Study.histories_for`; resume replays the recorded set).
     """
+    if transfer not in TRANSFER_MODES:
+        raise ValueError(
+            f"transfer must be one of {TRANSFER_MODES}, got {transfer!r}"
+        )
     factory = _factory_for(algorithm)
     # warm-start a model-based strategy from the persistent eval cache
     # *before* the defaults trial lands in it: a re-run over a complete cache
@@ -191,6 +215,11 @@ def run_session(
         and "history" not in algo_kwargs
     )
     history = scheduler.cached_observations() if attach_history else None
+    has_transfer = (
+        transfer != "off"
+        and bool(siblings)
+        and getattr(factory, "supports_transfer", False)
+    )
     # strategies that override the on_study_attach seam receive history
     # there; legacy supports_history strategies — including protocol-only
     # classes with no hook attribute at all — still get the constructor kwarg
@@ -206,8 +235,14 @@ def run_session(
     if algorithm in ("gsft", "grid"):
         algo_kwargs.setdefault("active_params", active_params)
     strategy = make_strategy(algorithm, space, fixed=fixed, **algo_kwargs)
-    if attach_history and uses_hook:
-        strategy.on_study_attach(history)
+    if uses_hook and (attach_history or has_transfer):
+        transfer_kwargs = (
+            {"siblings": list(siblings), "transfer": transfer}
+            if has_transfer else {}
+        )
+        strategy.on_study_attach(
+            history if attach_history else (), **transfer_kwargs
+        )
     result = scheduler.run(strategy, batch_size=batch_size, patience=patience)
     best_config, best_time = result.best_config, result.best_time
 
@@ -431,6 +466,7 @@ class Study:
         fixed: Optional[Dict[str, Any]] = None,
         active_params: Optional[Sequence[str]] = None,
         engine: Optional[EngineConfig] = None,
+        transfer: str = "off",
         **algo_kwargs,
     ) -> TuneOutcome:
         """Run one tuning session against the study's storage.
@@ -440,6 +476,12 @@ class Study:
         history the strategy itself produced counts toward it, so repeating a
         session over a complete cache proposes nothing fresh. ``seed``
         defaults to the study seed for strategies that take one.
+
+        ``transfer`` turns on the cross-cell channel: ``"warm"`` seeds the
+        strategy's initial candidates from sibling-cell incumbents,
+        ``"prior"`` feeds sibling observations to TPE's densities with a
+        distance-decayed weight (see :meth:`histories_for`); sibling trials
+        never count toward ``budget``.
         """
         space = space or _space_for(platform)
         eng = engine or self.engine
@@ -449,10 +491,52 @@ class Study:
                 scheduler, platform, algorithm, space, eng,
                 budget=budget, seed=seed, fixed=fixed,
                 active_params=active_params, evaluator=evaluator,
+                transfer=transfer,
                 **algo_kwargs,
             )
         finally:
             scheduler.close()
+
+    def histories_for(
+        self,
+        platform: str,
+        *,
+        similarity: Optional[Similarity] = None,
+        max_siblings: Optional[int] = None,
+        max_distance: Optional[float] = None,
+    ) -> List[SiblingHistory]:
+        """Sibling-cell histories for ``platform``, closest first: one
+        :class:`~repro.core.transfer.SiblingHistory` per *other* cache
+        namespace whose distance under ``similarity`` (default
+        :func:`~repro.core.transfer.default_similarity` over arch, shape,
+        chips) is finite. Grouping is by each record's **stored** namespace,
+        so a ``train/a:s@512c`` chip-count variant is its own sibling, never
+        folded into ``train/a:s``, and legacy unplatformed records are
+        attributed to no cell at all. Only clean ``status="ok"`` records
+        qualify — a sibling's timeouts and errors are not evidence."""
+        if self.cache_path is None or not self.cache_path.exists():
+            return []
+        sim = similarity or default_similarity
+        me = parse_namespace(platform)
+        out: List[SiblingHistory] = []
+        for ns, records in read_cache_by_platform(self.cache_path).items():
+            if not ns or ns == platform:
+                continue
+            distance = sim(me, parse_namespace(ns))
+            if distance is None or not (distance < float("inf")):
+                continue
+            if max_distance is not None and distance > max_distance:
+                continue
+            trials = tuple(
+                (dict(rec["config"]), float(rec["time_s"]), rec.get("tag"))
+                for rec in records.values()
+                if "config" in rec and "time_s" in rec
+                and rec.get("status", "ok") == "ok"
+            )
+            if trials:
+                out.append(SiblingHistory(ns, float(distance), trials))
+        out.sort(key=lambda s: (s.distance, s.namespace))
+        return out[:max_siblings] if max_siblings is not None else out
 
     def _run_session(
         self,
@@ -468,6 +552,8 @@ class Study:
         active_params: Optional[Sequence[str]],
         evaluator: Any,
         resumes: Optional[int] = None,
+        transfer: str = "off",
+        siblings: Optional[List[SiblingHistory]] = None,
         **algo_kwargs,
     ) -> TuneOutcome:
         misplaced = sorted({
@@ -481,6 +567,27 @@ class Study:
                 "(engine=...) or the study directory"
             )
         factory = _factory_for(algorithm)
+        if transfer not in TRANSFER_MODES:
+            raise ValueError(
+                f"transfer must be one of {TRANSFER_MODES}, got {transfer!r}"
+            )
+        if transfer != "off":
+            modes = getattr(factory, "transfer_modes", ())
+            if not getattr(factory, "supports_transfer", False) or not modes:
+                raise ValueError(
+                    f"algorithm {algorithm!r} does not support cross-cell "
+                    "transfer (supports_transfer is not set) — run with "
+                    "transfer='off'"
+                )
+            if transfer not in modes:
+                # e.g. gsft/crs asked for "prior": downgrade to the mode the
+                # strategy actually implements, and record THAT — provenance
+                # must never claim a prior that was really warm seeding
+                transfer = modes[-1] if "warm" not in modes else "warm"
+            if siblings is None:  # resume passes the recorded set instead
+                siblings = self.histories_for(platform)
+        else:
+            siblings = None
         if budget is not None:
             budget_kwarg = getattr(factory, "budget_kwarg", None)
             if not budget_kwarg:
@@ -523,6 +630,18 @@ class Study:
             "log_path": str(scheduler.log_path) if scheduler.log_path else None,
             "evaluator_spec": _spec_ref(evaluator),
         }
+        if transfer != "off":
+            # the exact sibling set is session provenance: resume must replay
+            # THESE namespaces (and these trial-count prefixes), not whatever
+            # the cache holds by then — and must raise if one went missing
+            start_rec["transfer"] = {
+                "mode": transfer,
+                "siblings": [
+                    {"namespace": s.namespace, "distance": s.distance,
+                     "trials": len(s.trials)}
+                    for s in (siblings or [])
+                ],
+            }
         if dropped:
             start_rec["args_dropped"] = sorted(dropped)
         if resumes is not None:
@@ -533,6 +652,7 @@ class Study:
             outcome = run_session(
                 scheduler, platform, algorithm, space,
                 fixed=fixed, active_params=active_params,
+                siblings=siblings, transfer=transfer,
                 **eng.run_kwargs(), **algo_kwargs,
             )
         except Exception as e:
@@ -628,6 +748,16 @@ class Study:
         eng = engine or EngineConfig.from_dict(rec.get("engine", {}))
         kwargs = dict(rec.get("args") or {})
         seed = kwargs.pop("seed", None)  # recorded post-injection; re-route
+        # a transfer session resumes with the SAME sibling set it started
+        # with — rebuilt from the recorded namespaces and trial-count
+        # prefixes; a sibling namespace that disappeared from the cache is a
+        # hard error, never a silent no-transfer rerun
+        stored_transfer = rec.get("transfer") or {}
+        transfer = stored_transfer.get("mode", "off")
+        siblings = (
+            self._siblings_from_record(rec, stored_transfer.get("siblings") or [])
+            if transfer != "off" else None
+        )
         scheduler = self.scheduler(
             evaluator, platform=rec["platform"], engine=eng,
             # a session logging to a custom file (per-cell logs) must keep
@@ -639,10 +769,46 @@ class Study:
                 scheduler, rec["platform"], rec["algorithm"], space, eng,
                 budget=None, seed=seed, fixed=rec.get("fixed"),
                 active_params=rec.get("active_params"), evaluator=evaluator,
-                resumes=rec["session"], **kwargs,
+                resumes=rec["session"], transfer=transfer, siblings=siblings,
+                **kwargs,
             )
         finally:
             scheduler.close()
+
+    def _siblings_from_record(
+        self, rec: Dict[str, Any], stored: List[Dict[str, Any]]
+    ) -> List[SiblingHistory]:
+        """Rebuild a recorded sibling set from the cache: per namespace, the
+        first ``trials`` clean records in cache order (the append-order
+        prefix the original session saw — later sibling growth must not
+        change a resumed session's prior). Missing or shrunken namespaces
+        raise."""
+        grouped = (
+            read_cache_by_platform(self.cache_path)
+            if self.cache_path is not None and self.cache_path.exists() else {}
+        )
+        out: List[SiblingHistory] = []
+        problems: List[str] = []
+        for s in stored:
+            ns, want = s["namespace"], int(s["trials"])
+            trials = tuple(
+                (dict(r["config"]), float(r["time_s"]), r.get("tag"))
+                for r in grouped.get(ns, {}).values()
+                if "config" in r and "time_s" in r
+                and r.get("status", "ok") == "ok"
+            )[:want]
+            if len(trials) < want:
+                problems.append(f"{ns} ({len(trials)}/{want} records)")
+                continue
+            out.append(SiblingHistory(ns, float(s["distance"]), trials))
+        if problems:
+            raise ValueError(
+                f"session {rec['session']} cannot be resumed faithfully: its "
+                f"transfer prior used sibling namespaces no longer (fully) in "
+                f"the cache: {', '.join(problems)} — restore the cache or "
+                "re-run optimize() from scratch"
+            )
+        return out
 
     # ---------------------------------------------------------------- cells
 
@@ -799,6 +965,7 @@ class Study:
                 continue
             sid = rec["session"]
             platforms.add(rec["platform"])
+            tr = rec.get("transfer") or {}
             row: Dict[str, Any] = {
                 "session": sid,
                 "platform": rec["platform"],
@@ -806,7 +973,10 @@ class Study:
                 "status": ("done" if sid in done
                            else "failed" if sid in failed
                            else "interrupted"),
+                "transfer": tr.get("mode", "off"),
             }
+            if tr.get("mode", "off") != "off":
+                row["transfer_siblings"] = len(tr.get("siblings") or [])
             if rec.get("resumes") is not None:
                 row["resumes"] = rec["resumes"]
             if sid in done:
@@ -935,14 +1105,18 @@ class StudyCell:
         seed: Optional[int] = None,
         fixed: Optional[Dict[str, Any]] = None,
         active_params: Optional[Sequence[str]] = None,
+        transfer: str = "off",
         **algo_kwargs,
     ) -> TuneOutcome:
-        """One tuning session on this cell, through its shared scheduler."""
+        """One tuning session on this cell, through its shared scheduler.
+        ``transfer`` pulls sibling-cell histories from the study-wide cache
+        (see :meth:`Study.histories_for`)."""
         scheduler = self.scheduler()
         assert self._engine is not None
         return self.study._run_session(
             scheduler, self.platform_key, algorithm, self.space, self._engine,
             budget=budget, seed=seed, fixed=fixed,
             active_params=active_params, evaluator=self._evaluator,
+            transfer=transfer,
             **algo_kwargs,
         )

@@ -47,6 +47,7 @@ def tune_cells(
     jobs: int = 1,
     trial_timeout: float = None,
     evaluator_factory=None,
+    transfer: str = "off",
     **algo_kwargs,
 ):
     """Tune each ``arch:shape`` cell; returns {cell: TuneOutcome}.
@@ -58,7 +59,12 @@ def tune_cells(
     combination raises rather than silently ignoring the knobs, like
     ``tune()``. ``evaluator_factory(arch, shape, space, platform)`` overrides
     the default RooflineEvaluator per cell (tests use a FunctionEvaluator
-    matrix)."""
+    matrix).
+
+    ``transfer`` (off|warm|prior) feeds each cell the earlier cells' sibling
+    histories from the shared cache (``Study.histories_for``): the matrix is
+    walked in order, so cell N+1 transfers from cells 1..N (and from any cell
+    a previous invocation left in the study)."""
     owns_study = study is None
     if owns_study:
         study = Study(
@@ -122,7 +128,7 @@ def tune_cells(
                         if log_dir else None
                     ),
                 )
-            outcome = handle.optimize(algorithm, **algo_kwargs)
+            outcome = handle.optimize(algorithm, transfer=transfer, **algo_kwargs)
             outcomes[cell] = outcome
             s = outcome.summary()
             print(f"[{cell}] best={s['best_time_s']:.4f}s "
@@ -149,6 +155,17 @@ def main(argv=None):
     ap.add_argument("--budget", type=int, default=32,
                     help="tpe per-cell trial budget (shared-cache history counts)")
     ap.add_argument("--seed", type=int, default=0, help="crs/tpe rng seed")
+    ap.add_argument("--transfer", default="off", choices=["off", "warm", "prior"],
+                    help="cross-cell transfer: each cell ingests the earlier "
+                         "cells' histories from the shared cache (warm = "
+                         "sibling incumbents seed candidates; prior = "
+                         "distance-decayed tpe Parzen prior; sibling trials "
+                         "never count toward --budget)")
+    ap.add_argument("--evaluator-factory", default=None, metavar="PKG.MOD:FN",
+                    help="dotted path to an evaluator factory "
+                         "fn(arch, shape, space, platform) overriding the "
+                         "default RooflineEvaluator per cell (tests/CI use a "
+                         "deterministic synthetic matrix)")
     ap.add_argument("--study", type=Path, default=None,
                     help="Study directory shared by every cell (cache + log + "
                          "session provenance; replaces --cache/--log-dir)")
@@ -200,12 +217,25 @@ def main(argv=None):
             jobs=engine.workers,
             trial_timeout=engine.timeout_s,
         )
+    evaluator_factory = None
+    if args.evaluator_factory:
+        import importlib
+
+        mod, _, attr = args.evaluator_factory.partition(":")
+        if not attr:
+            raise SystemExit(
+                f"bad --evaluator-factory {args.evaluator_factory!r}: "
+                "expected PKG.MOD:FN"
+            )
+        evaluator_factory = getattr(importlib.import_module(mod), attr)
     try:
         outcomes = tune_cells(
             args.cells,
             algorithm=args.algorithm,
             chips=args.chips,
             study=study,
+            transfer=args.transfer,
+            evaluator_factory=evaluator_factory,
             **engine_kwargs,
             **algo_kwargs,
         )

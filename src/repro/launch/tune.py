@@ -149,6 +149,12 @@ def main(argv=None):
     ap.add_argument("--round-size", type=int, default=8,
                     help="tpe proposals per acquisition round (size --jobs to this)")
     ap.add_argument("--seed", type=int, default=0, help="crs/tpe rng seed")
+    ap.add_argument("--transfer", default="off", choices=["off", "warm", "prior"],
+                    help="cross-cell transfer from sibling cells in the same "
+                         "study: warm = seed candidates from sibling "
+                         "incumbents (gsft/crs/tpe), prior = distance-decayed "
+                         "Parzen prior over sibling observations (tpe); "
+                         "sibling trials never count toward --budget")
     ap.add_argument("--log", type=Path, default=Path("results/tune_log.jsonl"),
                     help="trial log (ignored when --study is given)")
     ap.add_argument("--out", type=Path, default=None, help="write best config JSON")
@@ -195,6 +201,7 @@ def main(argv=None):
             space=space,
             budget=budget,
             active_params=active if args.algorithm == "gsft" else None,
+            transfer=args.transfer,
             **kwargs,
         )
     print(json.dumps(outcome.summary(), indent=1, default=str))

@@ -132,3 +132,84 @@ def test_tpu_hbm_estimator_directionality():
     assert micro["carries_gib"] < base["carries_gib"]
     no_zero = estimate_tpu_hbm(arch, RunConfig(zero_sharding="none"), shape, FakeMesh)
     assert no_zero["params_gib"] > base["params_gib"]
+
+
+def test_cross_cell_probe_compile_cache():
+    """Identical (arch, probe RunConfig, shape, mesh, step builder) probes
+    compile once per process — a second evaluator for the same cell (the
+    multi-cell matrix walk, a repeated session) reuses the extracted costs
+    instead of recompiling; any key component changing recompiles."""
+    from repro.configs.archs import get_arch
+    from repro.configs.base import SHAPES, RunConfig
+    from repro.core.roofline import (_compile_cost_probe, clear_probe_cache,
+                                     probe_cache_stats)
+
+    arch = get_arch("llama3.2-1b")
+    shape = SHAPES["train_4k"]
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+
+        class devices:
+            shape = (16, 16)
+            size = 256
+
+    class FakeCompiled:
+        def cost_analysis(self):
+            return {"flops": 123.0, "bytes accessed": 456.0}
+
+        def as_text(self):
+            return ""
+
+    class FakeBundle:
+        def lower(self):
+            return self
+
+        def compile(self):
+            return FakeCompiled()
+
+    compiles = []
+
+    def fake_make_step(arch, run, shape, mesh):
+        compiles.append(run)
+        return FakeBundle()
+
+    clear_probe_cache()
+    try:
+        run = RunConfig()
+        c1 = _compile_cost_probe(arch, run, shape, FakeMesh, fake_make_step)
+        assert len(compiles) == 1
+        # probe runs are normalized (scan_layers off, microbatch pinned)
+        assert compiles[0].scan_layers is False
+
+        # same cell, new "evaluator" (same args) -> cache hit, no compile
+        c2 = _compile_cost_probe(arch, run, shape, FakeMesh, fake_make_step)
+        assert len(compiles) == 1
+        assert c2 is c1
+        assert probe_cache_stats()["entries"] == 1
+
+        # equal-but-distinct RunConfig still hits (value-keyed, not identity)
+        c3 = _compile_cost_probe(arch, RunConfig(), shape, FakeMesh,
+                                 fake_make_step)
+        assert len(compiles) == 1 and c3 is c1
+
+        # any key component changing -> fresh compile
+        _compile_cost_probe(arch, run, shape, FakeMesh, fake_make_step,
+                            microbatch=8)
+        assert len(compiles) == 2
+        _compile_cost_probe(arch, RunConfig(remat_policy="none"), shape,
+                            FakeMesh, fake_make_step)
+        assert len(compiles) == 3
+        _compile_cost_probe(arch, run, SHAPES["prefill_32k"], FakeMesh,
+                            fake_make_step)
+        assert len(compiles) == 4
+
+        class OtherMesh(FakeMesh):
+            class devices:
+                shape = (32, 8)
+                size = 256
+
+        _compile_cost_probe(arch, run, shape, OtherMesh, fake_make_step)
+        assert len(compiles) == 5
+    finally:
+        clear_probe_cache()  # never leak fake costs into real compiles

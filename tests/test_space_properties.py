@@ -23,6 +23,7 @@ import random
 from _hyp import HAVE_HYPOTHESIS, given, settings, st
 
 from repro.core.space import CatParam, FloatParam, IntParam, SPACES
+from repro.core.transfer import snap_into_space
 from repro.apps.wordcount import WORDCOUNT_SPACE
 
 _POW2_LOS = (0, 1, 2, 4, 8, 16)
@@ -100,6 +101,25 @@ def _check_pow2_snap(p, raw):
     v = p.snap(raw)
     assert v == 0 or _is_pow2(v), (p, raw, v)
     assert p.lo <= v <= p.hi
+
+
+def _check_snap_into_space(space, raw_config):
+    """Cross-cell transfer invariant: any sibling config snapped into a
+    (possibly different) cell's space lands in-bounds, on-grid, and the
+    result is a fixed point — including pow2 and step-grid params. Foreign
+    keys are dropped; missing params fall back to the space default."""
+    snapped = snap_into_space(space, raw_config)
+    assert set(snapped) == {p.name for p in space.params}, snapped
+    # idempotent: snapping a snapped config is the identity
+    assert snap_into_space(space, snapped) == snapped
+    for p in space.params:
+        v = snapped[p.name]
+        assert p.snap(v) == v, (p, raw_config.get(p.name), v)  # on-grid fixed point
+        if p.name not in raw_config:
+            # missing params land on the SNAPPED default (a shipped default
+            # may sit off its own step grid — wordcount's io_sort_mb)
+            assert v == p.snap(p.default)
+        _check_snap(p, v)  # in bounds / in choices / pow2 / step grid
 
 
 # ------------------------------------------------------- param constructors
@@ -227,6 +247,62 @@ def test_property_shipped_spaces_hold_invariants(seed):
         _check_sample_overrides(p, rng, rng.random(), rng.random())
 
 
+_SHIPPED_SPACES = (*SPACES.values(), WORDCOUNT_SPACE)
+
+
+def _donor_config(rng, donor):
+    """A sibling-cell config as the transfer path can see it: legal samples,
+    wildly out-of-bounds raw values, junk categoricals, missing params, and
+    keys the target space has never heard of."""
+    cfg = {}
+    for p in donor.params:
+        r = rng.random()
+        if r < 0.4:
+            cfg[p.name] = p.sample(rng)
+        elif r < 0.7:
+            cfg[p.name] = rng.uniform(-1e6, 1e6) if p.numeric else "junk"
+        # else: omit — snapping must fall back to the target-space default
+    cfg["totally_foreign_knob"] = rng.random()
+    return cfg
+
+
+@given(st.integers(0, 2**16))
+@settings(max_examples=150, deadline=None)
+def test_property_sibling_config_snaps_into_any_space(seed):
+    """Any donor cell's config lands in any target space in-bounds, on-grid,
+    idempotent — across every shipped (train/serve/wordcount) space pair, so
+    pow2, step-grid int, step-grid float, and categorical params are all
+    exercised."""
+    rng = random.Random(seed)
+    donor = _SHIPPED_SPACES[rng.randrange(len(_SHIPPED_SPACES))]
+    target = _SHIPPED_SPACES[rng.randrange(len(_SHIPPED_SPACES))]
+    _check_snap_into_space(target, _donor_config(rng, donor))
+
+
+@given(st.integers(-100_000, 100_000), st.integers(-100_000, 100_000),
+       st.floats(-1e6, 1e6, allow_nan=False))
+@settings(max_examples=150, deadline=None)
+def test_property_sibling_snap_handles_pow2_and_step_grids(raw_pow2, raw_step,
+                                                          raw_float):
+    """The adversarial corners by construction: pow2, step-grid int, and
+    step-grid float params all snap raw sibling values onto their grids."""
+    from repro.core.space import TunableSpace
+
+    space = TunableSpace(
+        platform="synthetic",
+        params=(
+            _pow2_param(1, 2048),
+            IntParam("stepped", 128, lo=128, hi=2048, step=128),
+            FloatParam("frac", 0.05, lo=0.025, hi=0.9, step=0.025),
+        ),
+        most_influential=("stepped",),
+    )
+    _check_snap_into_space(space, {
+        "k": raw_pow2, "stepped": raw_step, "frac": raw_float,
+        "alien": "value",
+    })
+
+
 # --------------------------------------- seeded fallback (no hypothesis req.)
 
 
@@ -260,3 +336,13 @@ def test_fallback_shipped_spaces_hold_invariants():
             _check_snap(p, rng.uniform(-1e5, 1e5) if p.numeric else "bogus")
             _check_grid(p, rng.randint(1, 8))
             _check_sample_overrides(p, rng, rng.random(), rng.random())
+
+
+def test_fallback_sibling_config_snapping():
+    """Seeded drive of the sibling-snap invariants — enforced on bare
+    installs too."""
+    rng = random.Random(2)
+    for _ in range(150):
+        donor = _SHIPPED_SPACES[rng.randrange(len(_SHIPPED_SPACES))]
+        target = _SHIPPED_SPACES[rng.randrange(len(_SHIPPED_SPACES))]
+        _check_snap_into_space(target, _donor_config(rng, donor))

@@ -1,0 +1,471 @@
+"""Cross-cell transfer: deterministic-simulation suite.
+
+A synthetic family of FunctionEvaluator-style cells over the real
+``TRAIN_SPACE`` (``tests/synthetic_cells.py``) with a known shared optimum
+and one shifted *outlier* cell. Everything is seeded and wall-clock-free, so
+the headline claims are exact, not statistical:
+
+  - transfer-on reaches the transfer-off run's incumbent in strictly fewer
+    fresh evaluations at equal budget,
+  - the outlier cell is not hurt beyond a bounded regret,
+  - sibling trials never count toward the session budget,
+  - the proposal stream is a pure function of (seed, observations, siblings),
+  - a seeded transfer session replays identically (0 fresh) when repeated
+    over its complete cache, resumes with the recorded sibling set, and
+    refuses to resume when a recorded sibling namespace went missing.
+"""
+import json
+import math
+import threading
+
+import pytest
+
+from repro.core import (
+    TRAIN_SPACE,
+    SiblingHistory,
+    Study,
+    TrialScheduler,
+    config_key,
+    default_similarity,
+    parse_namespace,
+    snap_into_space,
+)
+from repro.core.scheduler import Trial, config_hash, read_cache_by_platform
+from repro.core.strategies.crs import CRSStrategy
+from repro.core.strategies.gsft import GridFinerStrategy
+from repro.core.strategies.tpe import TPEStrategy
+from repro.core.transfer import CellKey
+
+from synthetic_cells import (
+    SHARED_TARGET,
+    SyntheticCellEvaluator,
+    base_for,
+    cell_time,
+    target_for,
+)
+
+CELL_A = "train/cellA:train_4k"
+CELL_B = "train/cellB:train_4k"
+CELL_C = "train/cellC:train_4k"  # the outlier
+
+BUDGET_A, SEED_A = 48, 1
+BUDGET_B = 24
+
+
+def _tune_family(tmp_path, name, second_cell, mode, seed_b, **algo_kwargs):
+    """Tune cell A, then ``second_cell`` with the given transfer mode, in one
+    fresh study. Returns (study, evaluator_A, outcome_A, evaluator_B,
+    outcome_B)."""
+    study = Study.create(tmp_path / name)
+    ev_a = SyntheticCellEvaluator("cellA")
+    out_a = study.optimize(CELL_A, "tpe", ev_a, budget=BUDGET_A, seed=SEED_A)
+    arch_b = second_cell.split("/")[1].split(":")[0]
+    ev_b = SyntheticCellEvaluator(arch_b)
+    out_b = study.optimize(second_cell, "tpe", ev_b, budget=BUDGET_B,
+                           seed=seed_b, transfer=mode, **algo_kwargs)
+    return study, ev_a, out_a, ev_b, out_b
+
+
+def _evals_to(trajectory, threshold):
+    """1-based index of the first fresh evaluation at or under threshold;
+    'budget exhausted without reaching it' reads as +inf."""
+    for i, t in enumerate(trajectory, start=1):
+        if t <= threshold:
+            return i
+    return math.inf
+
+
+# ---------------------------------------------------- the headline guarantees
+
+
+def test_transfer_prior_reaches_incumbent_in_fewer_fresh_evals(tmp_path):
+    """At equal budget, the sibling cell under --transfer prior reaches the
+    transfer-off run's own incumbent in strictly fewer fresh evaluations."""
+    _, _, _, ev_off, out_off = _tune_family(tmp_path, "off", CELL_B, "off", 4)
+    _, _, _, ev_pri, out_pri = _tune_family(tmp_path, "pri", CELL_B, "prior", 4)
+
+    incumbent_time = out_off.best_time
+    reached_off = _evals_to(ev_off.trajectory, incumbent_time)
+    reached_pri = _evals_to(ev_pri.trajectory, incumbent_time)
+    assert reached_pri < reached_off, (reached_pri, reached_off)
+    # and the transferred run is at least as good at the same price
+    assert out_pri.best_time <= out_off.best_time
+    assert ev_pri.calls == ev_off.calls  # equal budget, equal fresh evals
+    assert out_pri.detail.transfer_mode == "prior"
+    assert out_pri.detail.sibling_observations > 0
+
+
+def test_outlier_cell_not_hurt_beyond_bounded_regret(tmp_path):
+    """Cell C's optimum is in the opposite corner — a misleading prior must
+    cost a bounded number of early proposals, not the session. Regret is
+    bounded across several seeds, not cherry-picked on one."""
+    bound = 0.5  # objective spans ~2.5s; defaults sit ~1.0s over optimum
+    for seed_b in (0, 1, 2, 3):
+        _, _, _, _, out_off = _tune_family(
+            tmp_path, f"off{seed_b}", CELL_C, "off", seed_b)
+        _, _, _, _, out_pri = _tune_family(
+            tmp_path, f"pri{seed_b}", CELL_C, "prior", seed_b)
+        regret = out_pri.best_time - out_off.best_time
+        assert regret <= bound, (seed_b, regret)
+
+
+def test_sibling_trials_never_count_toward_budget(tmp_path):
+    """The transferred session pays exactly its own budget (+1 defaults
+    trial): sibling observations are free model evidence, not spent trials —
+    and none of the sibling's configs are force-replayed into this cell."""
+    _, ev_a, _, ev_b, out = _tune_family(tmp_path, "s", CELL_B, "prior", 2)
+    assert out.evaluations == BUDGET_B + 1  # own budget + defaults, exactly
+    assert out.detail.sibling_observations >= BUDGET_A  # prior ingested A
+    assert ev_b.calls == BUDGET_B + 1  # all fresh evals were cell B's own
+
+
+def test_warm_mode_seeds_tpe_startup_with_sibling_incumbent(tmp_path):
+    """--transfer warm: the first proposal after the defaults trial is the
+    sibling's incumbent snapped into this cell (budget-charged like any
+    proposal — warm seeds are trials, not free evidence)."""
+    _, _, out_a, ev_b, out_b = _tune_family(tmp_path, "w", CELL_B, "warm", 2)
+    expected = cell_time(
+        snap_into_space(TRAIN_SPACE, out_a.best_config),
+        target=target_for("cellB"), base=base_for("cellB"),
+    )
+    # trajectory[0] is the defaults trial, [1] the first strategy proposal
+    assert ev_b.trajectory[1] == pytest.approx(expected)
+    assert out_b.detail.transfer_mode == "warm"
+    assert out_b.detail.sibling_observations == 0  # warm adds no prior points
+    assert out_b.evaluations == BUDGET_B + 1
+
+
+# ------------------------------------------------ purity of the proposal flow
+
+
+def _drive(strategy, objective, batch=None, limit=200):
+    """Ask/tell loop against a deterministic objective; returns the proposed
+    config-key stream."""
+    stream = []
+    while not strategy.done and len(stream) < limit:
+        configs = strategy.ask(batch)
+        if not configs:
+            break
+        stream += [config_key(c) for c in configs]
+        strategy.tell([Trial(dict(c), objective(c)) for c in configs])
+    return stream
+
+
+def _siblings_from(evaluations):
+    return [SiblingHistory("train/cellA:train_4k", 1.0, tuple(evaluations))]
+
+
+def _family_history(n=20, seed=9):
+    """Deterministic pseudo-history of cell A: n seeded samples of the space
+    with their true cell-A times."""
+    import random
+
+    rng = random.Random(seed)
+    out = []
+    for _ in range(n):
+        cfg = {p.name: p.sample(rng) for p in TRAIN_SPACE.params}
+        t = cell_time(cfg, target=target_for("cellA"), base=base_for("cellA"))
+        out.append((cfg, t, "tpe/round1"))
+    return out
+
+
+def test_proposal_stream_is_pure_function_of_seed_obs_siblings():
+    sibs = _siblings_from(_family_history())
+    objective = lambda c: cell_time(  # noqa: E731
+        c, target=target_for("cellB"), base=base_for("cellB"))
+
+    def fresh(seed):
+        s = TPEStrategy(TRAIN_SPACE, max_trials=16, seed=seed)
+        s.on_study_attach((), siblings=sibs, transfer="prior")
+        return s
+
+    # same (seed, siblings) -> byte-identical stream
+    assert _drive(fresh(7), objective) == _drive(fresh(7), objective)
+    # batch size changes scheduling, not the proposed set (round batching)
+    assert set(_drive(fresh(7), objective, batch=1)) == \
+        set(_drive(fresh(7), objective, batch=5))
+    # the siblings are part of the function's domain: drop them, stream moves
+    bare = TPEStrategy(TRAIN_SPACE, max_trials=16, seed=7)
+    assert _drive(bare, objective) != _drive(fresh(7), objective)
+    # and a different seed moves it too
+    assert _drive(fresh(8), objective) != _drive(fresh(7), objective)
+
+
+def test_attach_after_construction_equals_constructor_history():
+    """on_study_attach(history, siblings) after construction is identical to
+    constructor history + attach — the rng resets make attach idempotent."""
+    hist = [(cfg, t) for cfg, t, _ in _family_history(8)]
+    sibs = _siblings_from(_family_history(12, seed=3))
+    objective = lambda c: cell_time(  # noqa: E731
+        c, target=target_for("cellB"), base=base_for("cellB"))
+
+    a = TPEStrategy(TRAIN_SPACE, max_trials=12, seed=5, history=hist)
+    a.on_study_attach((), siblings=sibs, transfer="prior")
+    b = TPEStrategy(TRAIN_SPACE, max_trials=12, seed=5)
+    b.on_study_attach(hist, siblings=sibs, transfer="prior")
+    assert _drive(a, objective) == _drive(b, objective)
+
+
+def test_gsft_and_crs_warm_seed_sibling_incumbents():
+    """The cheap warm mode: sibling incumbents (snapped into the local space)
+    lead the initial candidate set of both paper algorithms."""
+    incumbent = {p.name: p.default for p in TRAIN_SPACE.params}
+    incumbent.update(SHARED_TARGET)
+    sibs = [SiblingHistory("train/cellA:train_4k", 0.5,
+                           ((incumbent, 3.0, "tpe/round1"),
+                            ({**incumbent, "mesh_model_parallel": 32}, 9.0,
+                             "tpe/round1")))]
+    expected = snap_into_space(TRAIN_SPACE, incumbent)
+
+    g = GridFinerStrategy(TRAIN_SPACE, samples_per_param=2)
+    n_grid = len(g._pending)
+    g.on_study_attach((), siblings=sibs, transfer="warm")
+    assert g.ask(1)[0] == expected
+    assert len(g._pending) == n_grid  # grid intact behind the seed
+
+    c = CRSStrategy(TRAIN_SPACE, m=6, seed=0)
+    c.on_study_attach((), siblings=sibs, transfer="warm")
+    first = c.ask(1)[0]
+    assert first == expected
+    # the rng draw stream was untouched: the 6 random draws still follow
+    assert len(c._pending) == 6
+
+
+def test_transfer_off_or_no_siblings_is_a_noop():
+    base = TPEStrategy(TRAIN_SPACE, max_trials=12, seed=3)
+    objective = lambda c: cell_time(  # noqa: E731
+        c, target=target_for("cellB"), base=base_for("cellB"))
+    off = TPEStrategy(TRAIN_SPACE, max_trials=12, seed=3)
+    off.on_study_attach((), siblings=_siblings_from(_family_history()),
+                        transfer="off")
+    empty = TPEStrategy(TRAIN_SPACE, max_trials=12, seed=3)
+    empty.on_study_attach((), siblings=[], transfer="prior")
+    expected = _drive(base, objective)
+    assert _drive(off, objective) == expected
+    assert _drive(empty, objective) == expected
+
+
+def test_unsupported_strategy_with_transfer_raises(tmp_path):
+    study = Study.create(tmp_path / "s")
+    ev = SyntheticCellEvaluator("cellA")
+    with pytest.raises(ValueError, match="does not support cross-cell"):
+        study.optimize(CELL_A, "hillclimb", ev, transfer="prior", moves=[])
+    with pytest.raises(ValueError, match="transfer must be one of"):
+        study.optimize(CELL_A, "tpe", ev, transfer="bogus")
+
+
+# ------------------------------------------------- provenance, replay, resume
+
+
+def test_prior_request_on_warm_only_strategy_records_effective_mode(tmp_path):
+    """gsft/crs only implement warm seeding; asking for 'prior' must run —
+    and RECORD — 'warm', never provenance for a prior that didn't exist."""
+    study = Study.create(tmp_path / "s")
+    study.optimize(CELL_A, "tpe", SyntheticCellEvaluator("cellA"),
+                   budget=10, seed=SEED_A)
+    study.optimize(CELL_B, "gsft", SyntheticCellEvaluator("cellB"),
+                   transfer="prior", samples_per_param=2)
+    row = study.report()["sessions"][-1]
+    assert row["transfer"] == "warm"
+    rec = [r for r in study.sessions() if r.get("event") == "start"][-1]
+    assert rec["transfer"]["mode"] == "warm"
+
+
+def test_report_carries_transfer_column(tmp_path):
+    study, _, _, _, _ = _tune_family(tmp_path, "r", CELL_B, "prior", 2)
+    rows = study.report()["sessions"]
+    assert [r["transfer"] for r in rows] == ["off", "prior"]
+    assert "transfer_siblings" not in rows[0]
+    assert rows[1]["transfer_siblings"] == 1  # cell A was the one sibling
+
+
+def test_transfer_session_replays_identically_over_complete_cache(tmp_path):
+    """Repeating the seeded transfer session over its complete cache pays
+    ZERO fresh evaluations and lands on the identical incumbent — the
+    warm-start history plus the recorded sibling set reproduce the run."""
+    study, _, _, _, first = _tune_family(tmp_path, "rep", CELL_B, "prior", 2)
+    ev2 = SyntheticCellEvaluator("cellB")
+    again = study.optimize(CELL_B, "tpe", ev2, budget=BUDGET_B, seed=2,
+                           transfer="prior")
+    assert ev2.calls == 0
+    assert again.cache_stats["fresh"] == 0
+    assert again.best_time == first.best_time
+    assert again.best_config == first.best_config
+
+
+class KillAfter:
+    """Synthetic cell that simulates SIGINT on the (n+1)-th fresh eval."""
+
+    def __init__(self, arch, n):
+        self.inner = SyntheticCellEvaluator(arch)
+        self.n = n
+        self._lock = threading.Lock()
+
+    def __call__(self, config):
+        with self._lock:
+            if self.inner.calls >= self.n:
+                raise KeyboardInterrupt
+        return self.inner(config)
+
+
+def test_interrupted_transfer_session_resumes_with_recorded_siblings(tmp_path):
+    """Kill the transfer session mid-run; resume() pays only the remainder,
+    reuses the RECORDED sibling set (the report row shows it), and the
+    combined total equals one uninterrupted run."""
+    _, _, _, ev_full, out_full = _tune_family(tmp_path, "full", CELL_B,
+                                              "prior", 2)
+
+    study = Study.create(tmp_path / "int")
+    ev_a = SyntheticCellEvaluator("cellA")
+    study.optimize(CELL_A, "tpe", ev_a, budget=BUDGET_A, seed=SEED_A)
+    killer = KillAfter("cellB", 9)
+    with pytest.raises(KeyboardInterrupt):
+        study.optimize(CELL_B, "tpe", killer, budget=BUDGET_B, seed=2,
+                       transfer="prior")
+    paid_before = killer.inner.calls
+    assert paid_before == 9
+
+    ev_rest = SyntheticCellEvaluator("cellB")
+    outcome = study.resume(evaluator=ev_rest)
+    assert paid_before + ev_rest.calls == ev_full.calls  # only the remainder
+    assert outcome.best_time <= out_full.best_time + 0.5  # sane incumbent
+    rows = study.report()["sessions"]
+    assert rows[-1]["transfer"] == "prior"
+    assert rows[-1]["transfer_siblings"] == 1
+    assert rows[-1]["resumes"] == rows[-2]["session"]
+    assert rows[-1]["status"] == "done"
+
+
+def test_resume_with_missing_sibling_namespace_raises(tmp_path):
+    """A transfer session whose recorded sibling namespace vanished from the
+    cache must refuse to resume — silently degrading to a no-prior rerun
+    would not replay the same search."""
+    study = Study.create(tmp_path / "s")
+    ev_a = SyntheticCellEvaluator("cellA")
+    study.optimize(CELL_A, "tpe", ev_a, budget=BUDGET_A, seed=SEED_A)
+    killer = KillAfter("cellB", 5)
+    with pytest.raises(KeyboardInterrupt):
+        study.optimize(CELL_B, "tpe", killer, budget=BUDGET_B, seed=2,
+                       transfer="prior")
+
+    # rewrite the cache without cell A's namespace, then reopen the study
+    cache = study.cache_path
+    kept = [json.dumps(r) for r in map(json.loads,
+                                       cache.read_text().splitlines())
+            if r.get("platform") != CELL_A]
+    cache.write_text("\n".join(kept) + "\n")
+    reopened = Study.load(study.path)
+    with pytest.raises(ValueError, match="sibling namespaces no longer"):
+        reopened.resume(evaluator=SyntheticCellEvaluator("cellB"))
+
+
+def test_resume_replays_a_prefix_when_the_sibling_grew(tmp_path):
+    """Between interrupt and resume the sibling cell kept tuning: the resumed
+    session must see exactly the recorded prefix of the sibling's records,
+    not the grown set (the prior has to replay, not drift)."""
+    study = Study.create(tmp_path / "s")
+    ev_a = SyntheticCellEvaluator("cellA")
+    study.optimize(CELL_A, "tpe", ev_a, budget=10, seed=SEED_A)
+    killer = KillAfter("cellB", 4)
+    with pytest.raises(KeyboardInterrupt):
+        study.optimize(CELL_B, "tpe", killer, budget=12, seed=2,
+                       transfer="prior")
+    rec = [r for r in study.sessions() if r.get("event") == "start"][-1]
+    recorded = rec["transfer"]["siblings"][0]["trials"]
+
+    # the sibling grows by another session's worth of records
+    study.optimize(CELL_A, "tpe", SyntheticCellEvaluator("cellA"),
+                   budget=18, seed=SEED_A + 1)
+    grown = study._siblings_from_record(rec, rec["transfer"]["siblings"])
+    assert len(grown[0].trials) == recorded  # prefix, not the grown set
+    all_now = study.histories_for(CELL_B)[0]
+    assert len(all_now.trials) > recorded  # ...which HAS grown underneath
+
+
+# ------------------------------------------- sibling buckets (cache plumbing)
+
+
+def _cache_record(platform, config, time_s, tag="tpe/round1", **extra):
+    rec = {"key": config_hash(config), "platform": platform, "tag": tag,
+           "ts": 0.0, "config": config, "time_s": time_s, "info": {}}
+    rec.update(extra)
+    return rec
+
+
+def _write_cache(path, records):
+    path.write_text("\n".join(json.dumps(r) for r in records) + "\n")
+
+
+def test_histories_for_buckets_by_stored_namespace(tmp_path):
+    """@Nc chip-count variants and legacy unplatformed records must never
+    leak into another cell's sibling bucket (the PR-4 keying, now honoured on
+    the read side too)."""
+    study = Study.create(tmp_path / "s")
+    cfg = {"mesh_model_parallel": 8}
+    _write_cache(study.cache_path, [
+        _cache_record("train/a:train_4k", {**cfg, "x": 1}, 1.0),
+        _cache_record("train/a:train_4k@512c", {**cfg, "x": 2}, 2.0),
+        _cache_record("train/b:train_4k", {**cfg, "x": 3}, 3.0),
+        # legacy record with no platform field: attributed to NO cell
+        {"key": "legacy0", "config": {**cfg, "x": 4}, "time_s": 4.0,
+         "ts": 0.0, "tag": "", "info": {}},
+        # serve cell: infinite distance from any train cell
+        _cache_record("serve/a:decode_32k", {**cfg, "x": 5}, 5.0),
+        # non-ok records are not evidence
+        _cache_record("train/a:train_4k", {**cfg, "x": 6}, 6.0,
+                      status="timeout", error="t", wall_s=9.0),
+    ])
+    sibs = study.histories_for("train/b:train_4k")
+    assert [s.namespace for s in sibs] == [
+        "train/a:train_4k", "train/a:train_4k@512c"]
+    # the same-chips sibling ranks closer than the @512c topology variant
+    assert sibs[0].distance < sibs[1].distance
+    # each bucket holds exactly its own records (and not the timeout one)
+    assert [t[0]["x"] for t in sibs[0].trials] == [1]
+    assert [t[0]["x"] for t in sibs[1].trials] == [2]
+    # the receiving cell itself is never its own sibling
+    assert all(s.namespace != "train/b:train_4k" for s in sibs)
+
+
+def test_cached_observations_exposes_stored_namespace(tmp_path):
+    """The scheduler-level read: with_platform=True appends each record's
+    STORED namespace — and the @512c variant never shows up in the base
+    cell's observations at all."""
+    cache = tmp_path / "cache.jsonl"
+    cfg_a, cfg_v = {"x": 1}, {"x": 2}
+    _write_cache(cache, [
+        _cache_record("train/a:train_4k", cfg_a, 1.0),
+        _cache_record("train/a:train_4k@512c", cfg_v, 2.0),
+    ])
+    sched = TrialScheduler(lambda c: (0.0, {}), platform="train/a:train_4k",
+                           cache_path=cache)
+    assert sched.cached_observations() == [(cfg_a, 1.0, "tpe/round1")]
+    assert sched.cached_observations(with_platform=True) == [
+        (cfg_a, 1.0, "tpe/round1", "train/a:train_4k")]
+    grouped = read_cache_by_platform(cache)
+    assert set(grouped) == {"train/a:train_4k", "train/a:train_4k@512c"}
+
+
+# ------------------------------------------------------- namespace/similarity
+
+
+def test_parse_namespace_decodes_all_driver_shapes():
+    assert parse_namespace("train") == CellKey("train")
+    assert parse_namespace("wordcount/variant") == \
+        CellKey("wordcount", arch="variant")
+    assert parse_namespace("train/llama:train_4k") == \
+        CellKey("train", "llama", "train_4k", 256)
+    assert parse_namespace("train/llama:train_4k@512c") == \
+        CellKey("train", "llama", "train_4k", 512)
+
+
+def test_default_similarity_orders_cells_sensibly():
+    me = parse_namespace("train/a:train_4k")
+    same_arch_other_chips = parse_namespace("train/a:train_4k@512c")
+    other_arch = parse_namespace("train/b:train_4k")
+    other_platform = parse_namespace("serve/a:decode_32k")
+    d_chips = default_similarity(me, same_arch_other_chips)
+    d_arch = default_similarity(me, other_arch)
+    assert 0 < d_chips < d_arch
+    assert math.isinf(default_similarity(me, other_platform))
+    assert default_similarity(me, me) == 0.0

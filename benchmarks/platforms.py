@@ -37,8 +37,12 @@ WC_ACTIVE = ["replication", "block_tokens", "num_map_tasks"]
 
 def wordcount_evaluator(num_tokens: int = 1 << 21, repeats: int = 2):
     corpus = make_corpus(num_tokens)
+    # fidelity-aware builder: ASHA's cheap rungs run a corpus prefix (and
+    # WalltimeEvaluator scales the repeat count); full fidelity is unchanged
     return WalltimeEvaluator(
-        builder=lambda cfg: build_wordcount(cfg, corpus), repeats=repeats
+        builder=lambda cfg, fidelity=1.0: build_wordcount(
+            cfg, corpus, fidelity=fidelity),
+        repeats=repeats,
     ), WORDCOUNT_SPACE
 
 

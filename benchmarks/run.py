@@ -42,7 +42,7 @@ def main(argv=None):
                          "re-run of the search tables performs no fresh "
                          "evaluations (ignored when --study is given)")
     ap.add_argument("--strategy", default="all",
-                    choices=["all", "gsft", "crs", "tpe"],
+                    choices=["all", "gsft", "crs", "tpe", "asha"],
                     help="which search strategy's tables to run (default all, "
                          "incl. the GSFT-vs-CRS-vs-TPE shootout)")
     ap.add_argument("--isolation", default=None,
@@ -124,6 +124,12 @@ def main(argv=None):
             print("\n## §Cross-cell transfer — WordCount matrix, sibling "
                   "cell with --transfer off vs prior (equal budgets)")
             rows = tables.table_transfer()
+            emit(rows); all_rows += rows
+
+        if args.strategy in ("all", "asha"):
+            print("\n## §Multi-fidelity ASHA — vs full-fidelity CRS/TPE on "
+                  "WordCount (equal search width, fraction of the cost)")
+            rows = tables.table_asha("wordcount")
             emit(rows); all_rows += rows
 
     print("\n## §Roofline — per (arch × shape) on the 16×16 production mesh "

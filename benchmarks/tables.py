@@ -208,6 +208,98 @@ def table_strategy_shootout(platform: str = "wordcount", seed: int = 0) -> List[
     return rows
 
 
+# ------------------------- ASHA vs full fidelity (equal config width)
+
+
+def _log_cost(path: Path) -> Dict[str, float]:
+    """Paid evaluation cost of a session from its trial log: fresh ok
+    trials only (cache replays cost nothing). ``cost_s`` sums the measured
+    per-trial time — fidelity-weighted by construction, since a cheap rung
+    runs a corpus prefix — and ``trial_equiv`` sums raw fidelities."""
+    from repro.core.scheduler import read_log
+
+    recs = [r for r in read_log(path)
+            if not r["cached"] and r.get("status", "ok") == "ok"]
+    return {
+        "fresh_trials": len(recs),
+        "cost_s": sum(float(r["time_s"]) for r in recs),
+        "trial_equiv": sum(float(r.get("fidelity", 1.0)) for r in recs),
+    }
+
+
+def table_asha(platform: str = "wordcount", budget: int = 32,
+               seed: int = 0) -> List[Dict[str, Any]]:
+    """Multi-fidelity ASHA against full-fidelity TPE and CRS at the same
+    search width (``budget`` distinct configurations each). The claim under
+    test: ASHA lands within 2% of the best full-fidelity incumbent while
+    paying no more than half the evaluation cost (sum of fidelity-weighted
+    fresh-trial time), because most of its configs die at the 1/9 rung.
+    A steep 4-rung ladder (eta=4 from 1/64) is what hits the cost target
+    under the eager top-``ceil(n/eta)`` promotion rule: a completion stream
+    that improves over time (TPE proposals) keeps entering the top set, so
+    shallow ladders over-promote into the expensive full rung. Rows (with
+    per-rung trial/promotion counts) are merged into
+    ``results/benchmarks/strategy_comparison.json``.
+
+    Every strategy here measures best-of-4 repeats (vs the suite's usual 2):
+    the comparison is between incumbents, and ASHA keeps only a handful of
+    full-fidelity measurements, so per-trial walltime noise that washes out
+    over TPE's 32 full trials would otherwise dominate its reported best."""
+    if platform == "wordcount":
+        ev, space = platforms.wordcount_evaluator(repeats=4)
+    else:
+        ev, space = _eval_for(platform)
+    opts = _scheduler_opts()
+
+    crs = tune(platform, "crs", ev, space=space,
+               m=max(4, budget // 4), k=3, max_rounds=4, seed=seed,
+               log_path=RESULTS / f"asha_crs_{platform}.jsonl", **opts)
+    tpe = tune(platform, "tpe", ev, space=space, max_trials=budget,
+               round_size=8, seed=seed, history=[],
+               log_path=RESULTS / f"asha_tpe_{platform}.jsonl", **opts)
+    asha = tune(platform, "asha", ev, space=space, max_trials=budget,
+                inner="tpe", eta=4.0, min_fidelity=1.0 / 64.0, seed=seed,
+                log_path=RESULTS / f"asha_asha_{platform}.jsonl", **opts)
+
+    # the within-2% verdict compares the *configs* each strategy chose,
+    # re-measured back to back under one best-of-8 yardstick — an in-run
+    # best is a min over N noisy measurements, which structurally favours
+    # the strategy that paid for more full-fidelity trials
+    judge, _ = (platforms.wordcount_evaluator(repeats=8)
+                if platform == "wordcount" else _eval_for(platform))
+    rows = []
+    for name, out in (("crs", crs), ("tpe", tpe), ("asha", asha)):
+        cost = _log_cost(RESULTS / f"asha_{name}_{platform}.jsonl")
+        rows.append({
+            "table": "asha", "platform": platform, "strategy": name,
+            "fidelity": "multi" if name == "asha" else "full",
+            "budget": budget,
+            "best_time_s": round(out.best_time, 4),
+            "verified_best_s": round(judge(out.best_config)[0], 4),
+            "default_time_s": round(out.default_time, 4),
+            "reduction_pct": round(out.reduction_pct, 2),
+            "fresh_trials": cost["fresh_trials"],
+            "cost_s": round(cost["cost_s"], 4),
+            "trial_equiv": round(cost["trial_equiv"], 2),
+        })
+    full_best = min(rows[0]["verified_best_s"], rows[1]["verified_best_s"])
+    full_cost = min(r["cost_s"] for r in rows[:2])
+    rows[-1]["rungs"] = asha.summary()["rungs"]
+    rows[-1]["within_2pct_of_full"] = (
+        rows[-1]["verified_best_s"] <= full_best * 1.02)
+    rows[-1]["cost_vs_full"] = round(rows[-1]["cost_s"] / full_cost, 3)
+    rows[-1]["half_cost_or_less"] = rows[-1]["cost_s"] <= 0.5 * full_cost
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    comparison = RESULTS / "strategy_comparison.json"
+    doc = json.loads(comparison.read_text()) if comparison.exists() else {
+        "platform": platform, "rows": []}
+    doc["rows"] = [r for r in doc.get("rows", [])
+                   if r.get("table") != "asha"] + rows
+    comparison.write_text(json.dumps(doc, indent=1, default=str))
+    return rows
+
+
 # ------------------------------------- cross-cell transfer (WordCount matrix)
 
 

@@ -1,0 +1,54 @@
+"""Multi-fidelity ASHA on the paper's WordCount job, next to a full-fidelity
+TPE session with the same search width.
+
+ASHA screens every candidate on a cheap corpus prefix (rung fidelities
+``min_fidelity * eta^k``) and promotes only the top ``1/eta`` of each rung —
+asynchronously, with no round barrier — so most of the budget is spent at a
+fraction of a full measurement. The session prints the per-rung survival
+table: 32 configs enter at 1/64 of the corpus, 4 reach a full measurement.
+
+    PYTHONPATH=src python examples/asha_wordcount.py
+"""
+from pathlib import Path
+
+from repro.apps.wordcount import make_evaluator
+from repro.core import Study
+
+STUDY_DIR = Path("results/studies/wordcount_asha")
+
+
+def main():
+    study = Study.open(STUDY_DIR)
+    evaluator = make_evaluator(repeats=4)
+
+    # full-fidelity yardstick: every TPE trial pays a complete measurement
+    tpe = study.optimize("wordcount", "tpe", evaluator, budget=32, seed=0)
+
+    # same width (32 distinct configs), but entered at 1/64 fidelity; the
+    # steep eta=4 ladder keeps the eager top-1/eta rule from over-promoting
+    asha = study.optimize(
+        "wordcount", "asha", evaluator,
+        budget=32, seed=0, inner="tpe", eta=4.0, min_fidelity=1.0 / 64.0,
+    )
+
+    print(f"TPE  best (32 full trials) : {tpe.best_time * 1e3:8.1f} ms "
+          f"(-{tpe.reduction_pct:.1f}%)")
+    print(f"ASHA best (rung ladder)    : {asha.best_time * 1e3:8.1f} ms "
+          f"(-{asha.reduction_pct:.1f}%, "
+          f"measured at fidelity {asha.detail.best_fidelity:g})")
+
+    print("\nrung  fidelity  launched  completed  promoted")
+    for row in asha.summary()["rungs"]:
+        print(f"{row['rung']:4d}  {row['fidelity']:8g}  {row['launched']:8d}"
+              f"  {row['completed']:9d}  {row['promoted']:8d}")
+
+    paid = sum(r["fidelity"] * r["completed"] for r in asha.summary()["rungs"])
+    print(f"\nfidelity-weighted cost: {paid:.1f} full-trial equivalents "
+          f"for {asha.detail.proposals} configs screened "
+          f"(vs 32.0 for the TPE session)")
+    print(f"study persisted at {STUDY_DIR} — rerun me for a zero-cost replay")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

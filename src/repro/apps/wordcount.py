@@ -106,10 +106,24 @@ def build_wordcount(
     *,
     vocab: int = VOCAB,
     mesh=None,
+    fidelity: float = 1.0,
 ) -> Callable[[], jnp.ndarray]:
     """Compile the WordCount job under ``config``; returns a zero-arg runner
-    (what the CMPE's WalltimeEvaluator times)."""
+    (what the CMPE's WalltimeEvaluator times).
+
+    ``fidelity < 1`` is input-scale fidelity: the job runs on the leading
+    ``fidelity`` fraction of the corpus — the paper's workload shrunk, not a
+    different workload — so an ASHA rung-0 probe costs a fraction of the
+    full measured trial while preserving the knobs' relative effects
+    (replication still re-reads the prefix, block/sort knobs still shape the
+    same map tasks)."""
     cfg = WORDCOUNT_SPACE.snap({**WORDCOUNT_SPACE.defaults(), **config})
+    if fidelity < 1.0:
+        # keep at least one token per map task so the chunking below stays
+        # well-formed at extreme rungs
+        n_keep = max(int(cfg["num_map_tasks"]),
+                     int(corpus.shape[0] * max(fidelity, 0.0)))
+        corpus = corpus[:n_keep]
     n_map = int(cfg["num_map_tasks"])
     block = int(cfg["block_tokens"])
     sortbuf = int(cfg["sort_buffer_tokens"])
@@ -175,7 +189,9 @@ def make_evaluator(corpus=None, repeats: int = 2):
         spec_kwargs["corpus"] = np.asarray(corpus)
     corpus = corpus if corpus is not None else make_corpus()
     return WalltimeEvaluator(
-        builder=lambda cfg: build_wordcount(cfg, corpus),
+        builder=lambda cfg, fidelity=1.0: build_wordcount(
+            cfg, corpus, fidelity=fidelity
+        ),
         repeats=repeats,
         spec=EvaluatorSpec.factory(
             "repro.apps.wordcount:make_evaluator", **spec_kwargs

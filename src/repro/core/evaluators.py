@@ -18,6 +18,7 @@ Three interchangeable implementations of the ``Evaluator`` protocol:
 """
 from __future__ import annotations
 
+import inspect
 import time
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional, Tuple
@@ -28,17 +29,46 @@ from repro.core import roofline as rl
 from repro.core.space import TunableSpace
 
 
+def _accepts_fidelity(fn: Callable[..., Any]) -> bool:
+    """Whether ``fn`` can be called with a ``fidelity=`` kwarg."""
+    try:
+        sig = inspect.signature(fn)
+    except (TypeError, ValueError):  # builtins / C callables
+        return False
+    for p in sig.parameters.values():
+        if p.kind is inspect.Parameter.VAR_KEYWORD:
+            return True
+        if p.name == "fidelity" and p.kind in (
+            inspect.Parameter.POSITIONAL_OR_KEYWORD,
+            inspect.Parameter.KEYWORD_ONLY,
+        ):
+            return True
+    return False
+
+
 @dataclass
 class FunctionEvaluator:
     """Wraps a plain function. Picklable whenever ``fn`` is a module-level
     function — which makes it subprocess-isolatable as-is; for closures and
     lambdas attach an :class:`~repro.core.executors.EvaluatorSpec` via
-    ``spec`` instead."""
+    ``spec`` instead.
+
+    If ``fn`` accepts a ``fidelity=`` kwarg the evaluator declares
+    ``supports_fidelity`` and forwards the rung fraction — the seam the
+    synthetic multi-fidelity objectives in the ASHA tests ride on. A plain
+    single-argument ``fn`` never sees the kwarg."""
 
     fn: Callable[[Dict[str, Any]], float]
     spec: Optional[Any] = None  # EvaluatorSpec for subprocess workers
 
-    def __call__(self, config: Dict[str, Any]) -> Tuple[float, Dict[str, Any]]:
+    def __post_init__(self):
+        self.supports_fidelity = _accepts_fidelity(self.fn)
+
+    def __call__(
+        self, config: Dict[str, Any], fidelity: float = 1.0
+    ) -> Tuple[float, Dict[str, Any]]:
+        if fidelity < 1.0 and self.supports_fidelity:
+            return float(self.fn(config, fidelity=fidelity)), {}
         return float(self.fn(config)), {}
 
 
@@ -50,22 +80,44 @@ class WalltimeEvaluator:
     ``parallel_safe`` is True: the TrialScheduler may fan a batch of these
     over its thread pool (the paper's trials are independent jobs). Beware
     that concurrent trials on one oversubscribed host contend for cores —
-    size ``max_workers`` to the machine, as you would cluster slots."""
+    size ``max_workers`` to the machine, as you would cluster slots.
+
+    Fidelity: a sub-fidelity trial measures fewer repeats
+    (``max(1, round(repeats × f))`` — measure-step fidelity), and a builder
+    that accepts ``fidelity=`` additionally gets the rung fraction to scale
+    the job itself (input-scale fidelity — e.g. WordCount on a corpus
+    prefix). The measured time is then the low-rung job's real time, which
+    is exactly what ASHA ranks within a rung."""
 
     builder: Callable[[Dict[str, Any]], Callable[[], Any]]
     repeats: int = 3
     parallel_safe: bool = True
     spec: Optional[Any] = None  # EvaluatorSpec — builders are usually closures
+    supports_fidelity = True
 
-    def __call__(self, config: Dict[str, Any]) -> Tuple[float, Dict[str, Any]]:
-        job = self.builder(config)
+    def __post_init__(self):
+        self._builder_takes_fidelity = _accepts_fidelity(self.builder)
+
+    def __call__(
+        self, config: Dict[str, Any], fidelity: float = 1.0
+    ) -> Tuple[float, Dict[str, Any]]:
+        if fidelity < 1.0 and self._builder_takes_fidelity:
+            job = self.builder(config, fidelity=fidelity)
+        else:
+            job = self.builder(config)
+        repeats = self.repeats
+        if fidelity < 1.0:
+            repeats = max(1, int(round(self.repeats * fidelity)))
         job()  # warmup / compile
         best = float("inf")
-        for _ in range(self.repeats):
+        for _ in range(repeats):
             t0 = time.perf_counter()
             job()
             best = min(best, time.perf_counter() - t0)
-        return best, {"repeats": self.repeats}
+        info: Dict[str, Any] = {"repeats": repeats}
+        if fidelity < 1.0:
+            info["fidelity"] = fidelity
+        return best, info
 
 
 @dataclass
@@ -86,9 +138,15 @@ class RooflineEvaluator:
     memory_penalty: str = "soft"  # soft | inf
     parallel_safe: bool = False
     spec: Optional[Any] = None  # EvaluatorSpec for subprocess workers
+    # probe-depth fidelity: a sub-fidelity call compiles only the single L1
+    # probe and extrapolates (skips the L2/M2 probes the affine cost model
+    # needs) — roughly 1/2 to 1/3 of the compile cost per fresh config
+    supports_fidelity = True
 
     def __post_init__(self):
-        self._probe_memo: Dict[Tuple[Any, int], Tuple[float, Dict[str, Any]]] = {}
+        self._probe_memo: Dict[
+            Tuple[Any, int, bool], Tuple[float, Dict[str, Any]]
+        ] = {}
 
     def __getstate__(self):
         # subprocess isolation pickles the evaluator into each worker —
@@ -97,21 +155,28 @@ class RooflineEvaluator:
         state["_probe_memo"] = {}
         return state
 
-    def __call__(self, config: Dict[str, Any]) -> Tuple[float, Dict[str, Any]]:
+    def __call__(
+        self, config: Dict[str, Any], fidelity: float = 1.0
+    ) -> Tuple[float, Dict[str, Any]]:
         run = self.space.to_run_config(config, self.base_run)
         mp = min(int(config.get("mesh_model_parallel", run.mesh_model_parallel)), self.chips)
         run = run.replace(mesh_model_parallel=mp)
 
-        memo_key = (run, mp)
+        full = fidelity >= 1.0
+        # fidelity is part of the memo identity — a cheap single-probe
+        # estimate must never replay as the full extrapolation
+        memo_key = (run, mp, full)
         hit = self._probe_memo.get(memo_key)
         if hit is not None:
             t, info = hit
             return t, {**info, "probe_compile_reused": True}
-        t, info = self._evaluate(run, mp)
+        t, info = self._evaluate(run, mp, full)
         self._probe_memo[memo_key] = (t, info)
         return t, info
 
-    def _evaluate(self, run: RunConfig, mp: int) -> Tuple[float, Dict[str, Any]]:
+    def _evaluate(
+        self, run: RunConfig, mp: int, full: bool = True
+    ) -> Tuple[float, Dict[str, Any]]:
         from repro.distributed.steps import make_step
         from repro.launch.mesh import make_tuning_mesh
 
@@ -119,13 +184,16 @@ class RooflineEvaluator:
 
         with compat_set_mesh(mesh):
             per_dev, probe_times = rl.extrapolated_costs(
-                self.arch, run, self.shape, mesh, make_step
+                self.arch, run, self.shape, mesh, make_step,
+                single_probe=not full,
             )
             roof = rl.make_roofline(per_dev, self.arch, self.shape, mesh)
         t = roof.t_step
 
         est = rl.estimate_tpu_hbm(self.arch, run, self.shape, mesh)
         info: Dict[str, Any] = {**roof.summary(), "hbm_est_gib": est["total_gib"]}
+        if not full:
+            info["probe_single"] = True  # cheap L1-only extrapolation
         if not est["fits_hbm_16gib"]:
             if self.memory_penalty == "inf":
                 return float("inf"), info

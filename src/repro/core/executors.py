@@ -18,9 +18,17 @@ This module makes isolation pluggable:
     tuning session, and workers are **reused warm** across trials and batches
     so device/jit initialisation is paid once per worker, not per trial.
 
+Both backends expose two execution paths: the round-batched ``run_batch``
+(one fidelity per batch, returns in plan order) and the streaming
+``submit``/``poll`` pair the scheduler's async seam drives (results come
+back the moment each trial finishes — what ASHA's no-barrier promotion
+rides on). Per-trial deadlines are **rung-scaled**: a trial at fidelity
+``f`` gets ``timeout_s × f``, so a hung rung-0 probe dies on the short
+deadline, not the full-fidelity one.
+
 Worker protocol (one duplex pipe per worker):
 
-    parent -> worker   ("run", seq, config, clear_caches) | ("exit",)
+    parent -> worker   ("run", seq, config, clear_caches, fidelity) | ("exit",)
     worker -> parent   ("ready", pid)
                        ("init_error", message)
                        ("ok", seq, time_s, scalar_info, eval_wall_s)
@@ -37,6 +45,7 @@ from __future__ import annotations
 import multiprocessing as mp
 import os
 import pickle
+import threading
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -44,7 +53,7 @@ from importlib import import_module
 from multiprocessing.connection import wait as _mp_wait
 from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
-from repro.core.scheduler import Trial, _scalar_info
+from repro.core.scheduler import Trial, _scalar_info, call_evaluator
 
 __all__ = [
     "EvaluatorSpec",
@@ -134,7 +143,8 @@ def _worker_main(conn, spec: EvaluatorSpec) -> None:
             return  # parent went away
         if not msg or msg[0] == "exit":
             return
-        _, seq, config, clear_caches = msg
+        _, seq, config, clear_caches = msg[:4]
+        fidelity = float(msg[4]) if len(msg) > 4 else 1.0
         if clear_caches:
             try:
                 import jax
@@ -144,7 +154,7 @@ def _worker_main(conn, spec: EvaluatorSpec) -> None:
                 pass
         t0 = time.time()
         try:
-            t, info = evaluator(config)
+            t, info = call_evaluator(evaluator, config, fidelity)
             conn.send(("ok", seq, float(t), _scalar_info(dict(info)),
                        time.time() - t0))
         except Exception as e:  # noqa: BLE001 — a failed run is a trial
@@ -161,7 +171,9 @@ class _Task:
     attempt: int
     seq: int
     t0_wall: float  # time.time() at dispatch — Trial.wall_s base
-    deadline: Optional[float]  # time.monotonic() hard-kill point
+    deadline: Optional[float]  # time.monotonic() hard-kill point (rung-scaled)
+    fidelity: float = 1.0
+    tag: Optional[str] = None
 
 
 class _Worker:
@@ -219,8 +231,17 @@ class _Worker:
 
 class ExecutionBackend:
     """Where fresh trials run. ``bind`` receives the owning scheduler (the
-    source of evaluator, timeout/retry policy, and the persistence hook);
-    ``run_batch`` returns ``(key, Trial)`` pairs in plan order."""
+    source of evaluator, timeout/retry policy, and the persistence hook).
+
+    Two execution paths:
+
+    - ``run_batch(plan, fidelity)`` — round-batched; returns ``(key, Trial)``
+      pairs in plan order after the whole batch drains.
+    - ``submit(key, config, fidelity, tag)`` + ``poll(timeout)`` — streaming;
+      each ``poll`` returns whichever trials finished, the moment they do.
+      The scheduler's async seam (``TrialScheduler.submit/poll/run_async``)
+      drives this path; ASHA's no-barrier promotions depend on it.
+    """
 
     name = "abstract"
 
@@ -228,23 +249,57 @@ class ExecutionBackend:
         self.sched = scheduler
 
     def run_batch(
-        self, plan: List[Tuple[str, Dict[str, Any]]]
+        self, plan: List[Tuple[str, Dict[str, Any]]], fidelity: float = 1.0
     ) -> List[Tuple[str, Trial]]:
         raise NotImplementedError
 
+    def submit(self, key: str, config: Dict[str, Any],
+               fidelity: float = 1.0, tag: Optional[str] = None) -> None:
+        raise NotImplementedError(f"{self.name} backend has no async path")
+
+    def poll(self, timeout: Optional[float] = None) -> List[Tuple[str, Trial]]:
+        raise NotImplementedError(f"{self.name} backend has no async path")
+
     def close(self) -> None:  # noqa: B027 — optional hook
         pass
+
+
+@dataclass
+class _InlineRun:
+    """One in-flight async trial on the inline backend's thread path."""
+
+    key: str
+    config: Dict[str, Any]
+    fidelity: float
+    tag: Optional[str]
+    started: Optional[float] = None  # time.monotonic() at evaluation start
+    abandoned: bool = False  # soft-timeout fired; late result is discarded
 
 
 class InlineBackend(ExecutionBackend):
     """The original in-process path: serial (or thread-pooled) evaluation via
     the scheduler's ``_run_one`` / ``_run_parallel``, soft timeouts only.
     ``clear_caches_between_trials`` forces the serial path with a global jit
-    cache clear before every fresh trial (clearing is global state)."""
+    cache clear before every fresh trial (clearing is global state).
+
+    The async ``submit``/``poll`` path runs each trial on its own daemon
+    thread with its *own* concurrency accounting rather than a thread pool:
+    a hung trial is abandoned at its (rung-scaled) soft deadline and drops
+    out of the running count, so it cannot poison a pool slot for the rest
+    of the session. ``parallel_safe=False`` evaluators and
+    ``clear_caches_between_trials`` serialize the thread path to one trial
+    at a time, matching the batch path's semantics.
+    """
 
     name = "inline"
 
-    def run_batch(self, plan):
+    def __init__(self):
+        self._cond = threading.Condition()
+        self._queue: deque = deque()  # (key, config, fidelity, tag)
+        self._running: Dict[str, _InlineRun] = {}
+        self._finished: List[Tuple[str, Trial]] = []
+
+    def run_batch(self, plan, fidelity=1.0):
         s = self.sched
         if s.clear_caches:
             import jax
@@ -252,12 +307,94 @@ class InlineBackend(ExecutionBackend):
             out = []
             for k, c in plan:
                 jax.clear_caches()
-                out.append((k, s._run_one(c)))
+                out.append((k, s._run_one(c, fidelity)))
             return out
         parallel_ok = getattr(s.evaluator, "parallel_safe", True)
         if s.max_workers > 1 and parallel_ok and len(plan) > 1:
-            return s._run_parallel(plan)
-        return [(k, s._run_one(c)) for k, c in plan]
+            return s._run_parallel(plan, fidelity)
+        return [(k, s._run_one(c, fidelity)) for k, c in plan]
+
+    # -- async path
+
+    def submit(self, key, config, fidelity=1.0, tag=None):
+        with self._cond:
+            self._queue.append((key, dict(config), fidelity, tag))
+            self._start_ready_locked()
+
+    def poll(self, timeout=None):
+        s = self.sched
+        end = None if timeout is None else time.monotonic() + timeout
+        with self._cond:
+            while True:
+                self._reap_timeouts_locked()
+                if self._finished or not (self._running or self._queue):
+                    break
+                now = time.monotonic()
+                if end is not None and now >= end:
+                    break
+                waits = [] if end is None else [end - now]
+                if s.timeout_s is not None:
+                    for run in self._running.values():
+                        if run.started is None:
+                            waits.append(0.05)  # thread not scheduled yet
+                        else:
+                            waits.append(
+                                run.started + s._deadline_for(run.fidelity) - now
+                            )
+                self._cond.wait(max(0.01, min(waits)) if waits else None)
+            out, self._finished = self._finished, []
+            return out
+
+    def _start_ready_locked(self) -> None:
+        s = self.sched
+        serial = s.clear_caches or not getattr(s.evaluator, "parallel_safe", True)
+        cap = 1 if serial else max(1, s.max_workers)
+        while self._queue and len(self._running) < cap:
+            key, config, fidelity, tag = self._queue.popleft()
+            run = _InlineRun(key, config, fidelity, tag)
+            self._running[key] = run
+            threading.Thread(target=self._work, args=(run,), daemon=True).start()
+
+    def _work(self, run: _InlineRun) -> None:
+        s = self.sched
+        if s.clear_caches:
+            try:
+                import jax
+
+                jax.clear_caches()
+            except Exception:  # noqa: BLE001 — evaluator may not use jax
+                pass
+        run.started = time.monotonic()
+        trial = s._run_one(run.config, run.fidelity, tag=run.tag)
+        with self._cond:
+            if not run.abandoned:
+                self._running.pop(run.key, None)
+                self._finished.append((run.key, trial))
+                self._start_ready_locked()
+            self._cond.notify_all()
+
+    def _reap_timeouts_locked(self) -> None:
+        """Abandon runs past their rung-scaled soft deadline. The thread
+        itself cannot be killed (inline semantics); it keeps running but no
+        longer counts against the concurrency cap, and its eventual result
+        is dropped here (``_run_one`` already persisted the real measurement
+        as a ``status="timeout"`` record)."""
+        s = self.sched
+        if s.timeout_s is None:
+            return
+        now = time.monotonic()
+        for key, run in list(self._running.items()):
+            eff = s._deadline_for(run.fidelity)
+            if run.started is not None and now >= run.started + eff:
+                run.abandoned = True
+                self._running.pop(key)
+                self._finished.append((key, Trial(
+                    dict(run.config), s.infeasible_time, {}, wall_s=eff,
+                    error=f"TrialTimeout: no result within {eff}s of start "
+                          "(soft; worker thread abandoned)",
+                    status="timeout", fidelity=run.fidelity,
+                )))
+        self._start_ready_locked()
 
 
 class SubprocessBackend(ExecutionBackend):
@@ -300,6 +437,11 @@ class SubprocessBackend(ExecutionBackend):
         # a contained OOM trial created) and retried a few times
         self._ever_ready = False
         self._init_failures = 0
+        # shared task state both execution paths pump through:
+        # (key, config, fidelity, tag, attempt) awaiting a worker, and
+        # finished (key, Trial) pairs not yet handed back to a caller
+        self._pending: deque = deque()
+        self._done: List[Tuple[str, Trial]] = []
 
     def bind(self, scheduler) -> None:
         super().bind(scheduler)
@@ -322,150 +464,195 @@ class SubprocessBackend(ExecutionBackend):
         if not self._ever_ready or self._init_failures >= self._MAX_INIT_FAILURES:
             raise RuntimeError(detail)
 
-    def run_batch(self, plan):
+    # -- task plumbing (shared by run_batch and submit/poll)
+
+    def _dispatch(self, w: _Worker, key: str, config: Dict[str, Any],
+                  fidelity: float, tag: Optional[str], attempt: int) -> None:
         s = self.sched
-        pending = deque((k, dict(c), 0) for k, c in plan)
-        done: Dict[str, Trial] = {}
-        target = max(1, min(s.max_workers, len(plan)))
+        self._seq += 1
+        eff = s._deadline_for(fidelity)
+        task = _Task(
+            key, config, attempt, self._seq, time.time(),
+            None if eff is None else time.monotonic() + eff,
+            fidelity=fidelity, tag=tag,
+        )
+        try:
+            w.conn.send(("run", task.seq, config, s.clear_caches, fidelity))
+        except (BrokenPipeError, OSError):
+            # worker died while idle — not the trial's fault; requeue at
+            # the same attempt and let the pool respawn
+            w.kill()
+            self._pending.appendleft((key, config, fidelity, tag, attempt))
+            return
+        w.task = task
 
-        def dispatch(w: _Worker, key: str, config: Dict[str, Any], attempt: int):
-            self._seq += 1
-            task = _Task(
-                key, config, attempt, self._seq, time.time(),
-                None if s.timeout_s is None
-                else time.monotonic() + s.timeout_s,
-            )
-            try:
-                w.conn.send(("run", task.seq, config, s.clear_caches))
-            except (BrokenPipeError, OSError):
-                # worker died while idle — not the trial's fault; requeue at
-                # the same attempt and let the pool respawn
-                w.kill()
-                pending.appendleft((key, config, attempt))
-                return
-            w.task = task
+    def _settle_failure(self, t: _Task, error: str) -> None:
+        """Crash or evaluator exception: retry if budget allows."""
+        if t.attempt < self.sched.retries:
+            self._pending.append((t.key, t.config, t.fidelity, t.tag,
+                                  t.attempt + 1))
+        else:
+            self._done.append((t.key, Trial(
+                dict(t.config), self.sched.infeasible_time, {},
+                wall_s=time.time() - t.t0_wall, error=error, status="error",
+                fidelity=t.fidelity,
+            )))
 
-        def settle_failure(t: _Task, error: str):
-            """Crash or evaluator exception: retry if budget allows."""
-            if t.attempt < s.retries:
-                pending.append((t.key, t.config, t.attempt + 1))
-            else:
-                done[t.key] = Trial(
-                    dict(t.config), s.infeasible_time, {},
-                    wall_s=time.time() - t.t0_wall, error=error, status="error",
-                )
-
-        def on_readable(w: _Worker):
-            try:
-                msg = w.conn.recv()
-            except (EOFError, OSError):
-                # hard crash: segfault, os._exit, OOM-kill — contain it
-                w.proc.join(1.0)  # reap so exitcode is real, not None
-                t, code = w.task, w.proc.exitcode
-                w.task = None
-                was_ready = w.ready
-                w.kill()
-                if t is not None:
-                    settle_failure(
-                        t, f"WorkerCrash: trial process pid {w.pid} died "
-                           f"(exit code {code})",
-                    )
-                elif not was_ready:
-                    self._init_failed(
-                        f"subprocess worker pid {w.pid} died during evaluator "
-                        f"construction (exit code {code})"
-                    )
-                return
-            kind = msg[0]
-            if kind == "ready":
-                w.ready = True
-                self._ever_ready = True
-                self._init_failures = 0
-                return
-            if kind == "init_error":
-                w.kill()
-                # an exception out of the evaluator factory is deterministic
-                # config breakage — always fatal, no retry
-                raise RuntimeError(
-                    f"evaluator construction failed in subprocess worker: {msg[1]}"
-                )
-            t = w.task
-            if t is None or msg[1] != t.seq:
-                return  # stale message from a superseded dispatch
+    def _on_readable(self, w: _Worker) -> None:
+        s = self.sched
+        try:
+            msg = w.conn.recv()
+        except (EOFError, OSError):
+            # hard crash: segfault, os._exit, OOM-kill — contain it
+            w.proc.join(1.0)  # reap so exitcode is real, not None
+            t, code = w.task, w.proc.exitcode
             w.task = None
-            if kind == "ok":
-                _, _, time_s, info, _eval_wall = msg
-                wall = time.time() - t.t0_wall
-                if s.timeout_s is not None and wall > s.timeout_s:
-                    trial = Trial(
-                        dict(t.config), float(time_s), dict(info), wall_s=wall,
-                        error=f"TrialTimeout: wall {wall:.1f}s > {s.timeout_s}s "
-                              "(completed over deadline; measurement kept)",
-                        status="timeout",
-                    )
+            was_ready = w.ready
+            w.kill()
+            if t is not None:
+                self._settle_failure(
+                    t, f"WorkerCrash: trial process pid {w.pid} died "
+                       f"(exit code {code})",
+                )
+            elif not was_ready:
+                self._init_failed(
+                    f"subprocess worker pid {w.pid} died during evaluator "
+                    f"construction (exit code {code})"
+                )
+            return
+        kind = msg[0]
+        if kind == "ready":
+            w.ready = True
+            self._ever_ready = True
+            self._init_failures = 0
+            return
+        if kind == "init_error":
+            w.kill()
+            # an exception out of the evaluator factory is deterministic
+            # config breakage — always fatal, no retry
+            raise RuntimeError(
+                f"evaluator construction failed in subprocess worker: {msg[1]}"
+            )
+        t = w.task
+        if t is None or msg[1] != t.seq:
+            return  # stale message from a superseded dispatch
+        w.task = None
+        if kind == "ok":
+            _, _, time_s, info, _eval_wall = msg
+            wall = time.time() - t.t0_wall
+            eff = s._deadline_for(t.fidelity)
+            if eff is not None and wall > eff:
+                trial = Trial(
+                    dict(t.config), float(time_s), dict(info), wall_s=wall,
+                    error=f"TrialTimeout: wall {wall:.1f}s > {eff}s "
+                          "(completed over deadline; measurement kept)",
+                    status="timeout", fidelity=t.fidelity,
+                )
+            else:
+                trial = Trial(dict(t.config), float(time_s), dict(info),
+                              wall_s=wall, fidelity=t.fidelity)
+            s._persist(trial, tag=t.tag)
+            self._done.append((t.key, trial))
+        else:  # "err" — exception inside the evaluator; worker stays warm
+            _, _, err, _eval_wall = msg
+            self._settle_failure(t, err)
+
+    def _outstanding(self) -> bool:
+        return bool(self._pending) or any(w.task for w in self._workers)
+
+    def _pump(self, wait_cap: Optional[float]) -> None:
+        """One scheduling iteration: reap dead workers, top up the pool,
+        dispatch pending tasks to idle warm workers, wait (bounded by the
+        nearest deadline and ``wait_cap``, an absolute ``time.monotonic()``
+        point or None for "until a message") for worker messages, and
+        SIGKILL anything past its deadline."""
+        s = self.sched
+        self._workers = [w for w in self._workers if not w.dead]
+        busy = sum(1 for w in self._workers if w.task)
+        target = max(1, min(s.max_workers, busy + len(self._pending)))
+        while len(self._workers) < target:
+            self._spawn()
+        for w in self._workers:
+            if not self._pending:
+                break
+            if w.ready and w.task is None and not w.dead:
+                self._dispatch(w, *self._pending.popleft())
+
+        conns = {
+            w.conn: w for w in self._workers
+            if not w.dead and (w.task is not None or not w.ready)
+        }
+        if not conns:
+            return  # everything respawning; caller loops to top up the pool
+        now = time.monotonic()
+        deadlines = [
+            w.task.deadline for w in conns.values()
+            if w.task is not None and w.task.deadline is not None
+        ] + [w.init_deadline for w in conns.values() if not w.ready]
+        if wait_cap is not None:
+            deadlines.append(wait_cap)
+        wait_s = None if not deadlines else max(0.0, min(deadlines) - now)
+        for conn in _mp_wait(list(conns), timeout=wait_s):
+            self._on_readable(conns[conn])
+
+        now = time.monotonic()
+        for w in self._workers:
+            if w.dead:
+                continue
+            t = w.task
+            if t is not None and t.deadline is not None and now >= t.deadline:
+                w.task = None
+                w.kill()  # the hard part: SIGKILL + reap, no appeal
+                self._done.append((t.key, Trial(
+                    dict(t.config), s.infeasible_time, {},
+                    wall_s=time.time() - t.t0_wall,
+                    error=f"TrialTimeout: exceeded hard deadline "
+                          f"{s._deadline_for(t.fidelity)}s — worker pid "
+                          f"{w.pid} SIGKILLed",
+                    status="timeout", fidelity=t.fidelity,
+                )))
+            elif not w.ready and now >= w.init_deadline:
+                w.kill()
+                self._init_failed(
+                    f"subprocess worker pid {w.pid} failed to initialise "
+                    f"within {self.worker_init_timeout_s}s"
+                )
+
+    # -- execution paths
+
+    def submit(self, key, config, fidelity=1.0, tag=None):
+        self._pending.append((key, dict(config), fidelity, tag, 0))
+
+    def poll(self, timeout=None):
+        end = None if timeout is None else time.monotonic() + timeout
+        while not self._done and self._outstanding():
+            self._pump(end)
+            if end is not None and time.monotonic() >= end:
+                break
+        out, self._done = self._done, []
+        return out
+
+    def run_batch(self, plan, fidelity=1.0):
+        for k, c in plan:
+            self.submit(k, c, fidelity)
+        want = {k for k, _ in plan}
+        done: Dict[str, Trial] = {}
+        stash: List[Tuple[str, Trial]] = []  # earlier async submissions
+        while want - done.keys():
+            for k, trial in self.poll(None):
+                if k in want:
+                    done[k] = trial
                 else:
-                    trial = Trial(dict(t.config), float(time_s), dict(info),
-                                  wall_s=wall)
-                s._persist(trial)
-                done[t.key] = trial
-            else:  # "err" — exception inside the evaluator; worker stays warm
-                _, _, err, _eval_wall = msg
-                settle_failure(t, err)
-
-        while pending or any(w.task for w in self._workers):
-            self._workers = [w for w in self._workers if not w.dead]
-            busy = sum(1 for w in self._workers if w.task)
-            while len(self._workers) < min(target, busy + len(pending)):
-                self._spawn()
-            for w in self._workers:
-                if not pending:
-                    break
-                if w.ready and w.task is None and not w.dead:
-                    dispatch(w, *pending.popleft())
-
-            conns = {
-                w.conn: w for w in self._workers
-                if not w.dead and (w.task is not None or not w.ready)
-            }
-            if not conns:
-                continue  # everything respawning; loop to top up the pool
-            now = time.monotonic()
-            deadlines = [
-                w.task.deadline for w in conns.values()
-                if w.task is not None and w.task.deadline is not None
-            ] + [w.init_deadline for w in conns.values() if not w.ready]
-            wait_s = None if not deadlines else max(0.0, min(deadlines) - now)
-            for conn in _mp_wait(list(conns), timeout=wait_s):
-                on_readable(conns[conn])
-
-            now = time.monotonic()
-            for w in self._workers:
-                if w.dead:
-                    continue
-                t = w.task
-                if t is not None and t.deadline is not None and now >= t.deadline:
-                    w.task = None
-                    w.kill()  # the hard part: SIGKILL + reap, no appeal
-                    done[t.key] = Trial(
-                        dict(t.config), s.infeasible_time, {},
-                        wall_s=time.time() - t.t0_wall,
-                        error=f"TrialTimeout: exceeded hard deadline "
-                              f"{s.timeout_s}s — worker pid {w.pid} SIGKILLed",
-                        status="timeout",
-                    )
-                elif not w.ready and now >= w.init_deadline:
-                    w.kill()
-                    self._init_failed(
-                        f"subprocess worker pid {w.pid} failed to initialise "
-                        f"within {self.worker_init_timeout_s}s"
-                    )
-
+                    stash.append((k, trial))
+        self._done = stash + self._done
         return [(k, done[k]) for k, _ in plan]
 
     def close(self) -> None:
         for w in self._workers:
             w.stop()
         self._workers = []
+        self._pending.clear()
+        self._done = []
 
 
 def make_backend(name: str, **options: Any) -> ExecutionBackend:

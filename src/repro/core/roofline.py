@@ -328,6 +328,8 @@ def reduced_arch(arch: ArchConfig, n_periods: int) -> ArchConfig:
 # access; subprocess workers each own a process-local copy).
 _PROBE_COSTS: Dict[Tuple, CostTerms] = {}
 _PROBE_COSTS_LOCK = threading.Lock()
+_PROBE_HITS = 0
+_PROBE_MISSES = 0
 
 
 def _probe_cache_key(arch, probe_run, shape, mesh, make_step_fn) -> Tuple:
@@ -345,22 +347,37 @@ def _probe_cache_key(arch, probe_run, shape, mesh, make_step_fn) -> Tuple:
 
 
 def probe_cache_stats() -> Dict[str, int]:
-    return {"entries": len(_PROBE_COSTS)}
+    """Process-wide probe-compile cache counters: resident entries plus
+    lifetime hit/miss counts — the observability hook ``study.report()``
+    surfaces so fidelity/cache savings are measurable, not anecdotal."""
+    return {
+        "entries": len(_PROBE_COSTS),
+        "hits": _PROBE_HITS,
+        "misses": _PROBE_MISSES,
+    }
 
 
 def clear_probe_cache() -> None:
+    global _PROBE_HITS, _PROBE_MISSES
     with _PROBE_COSTS_LOCK:
         _PROBE_COSTS.clear()
+        _PROBE_HITS = 0
+        _PROBE_MISSES = 0
 
 
 def _compile_cost_probe(arch, run, shape, mesh, make_step_fn, microbatch=0) -> CostTerms:
     """Loop-free compile of a reduced cell; returns per-device costs.
     Identical probes — same (arch, probe RunConfig, shape, mesh topology,
     step builder) — are compiled once per process."""
+    global _PROBE_HITS, _PROBE_MISSES
     probe_run = run.replace(scan_layers=False, microbatch_size=microbatch)
     key = _probe_cache_key(arch, probe_run, shape, mesh, make_step_fn)
     with _PROBE_COSTS_LOCK:
         hit = _PROBE_COSTS.get(key)
+        if hit is not None:
+            _PROBE_HITS += 1
+        else:
+            _PROBE_MISSES += 1
     if hit is not None:
         return hit
     bundle = make_step_fn(arch, probe_run, shape, mesh)
@@ -377,9 +394,18 @@ def extrapolated_costs(
     shape: ShapeConfig,
     mesh,
     make_step_fn,
+    single_probe: bool = False,
 ) -> Tuple[CostTerms, Dict[str, float]]:
     """Solve the affine cost model from loop-free reduced-depth probes and
-    return full-depth per-device costs (+ probe timing diagnostics)."""
+    return full-depth per-device costs (+ probe timing diagnostics).
+
+    ``single_probe=True`` is the low-fidelity path (ASHA's cheap rungs):
+    only the L1 probe is compiled and the full-depth cost is the naive
+    ``a1·g`` extrapolation — it overcounts the fixed per-step overhead by
+    ``(g-1)·c0``, but ranks candidates well enough to screen, at one compile
+    instead of two or three. It shares the L1 probe cache entry with the
+    full path, so promoting a screened config pays only the missing
+    probes."""
     period = tfm.structural_period(arch)
     g_full = arch.num_layers // period
     times = {}
@@ -389,6 +415,9 @@ def extrapolated_costs(
     times["probe_L1_s"] = time.time() - t0
     if g_full == 1:
         return a1, times
+    if single_probe:
+        times["probe_single"] = 1.0
+        return a1.scaled(g_full), times
 
     t0 = time.time()
     a2 = _compile_cost_probe(reduced_arch(arch, 2), run, shape, mesh, make_step_fn)

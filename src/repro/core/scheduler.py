@@ -42,7 +42,13 @@ INFEASIBLE = float("inf")
 
 
 class Evaluator(Protocol):
-    """config dict -> (execution time in seconds, info dict)."""
+    """config dict -> (execution time in seconds, info dict).
+
+    Fidelity-aware evaluators additionally accept ``fidelity=`` (a fraction
+    ``0 < f <= 1`` of the full per-trial budget — see
+    :mod:`repro.core.fidelity`) and set ``supports_fidelity = True``; the
+    scheduler only forwards the kwarg to evaluators that declare it, so a
+    plain full-fidelity evaluator never sees it."""
 
     def __call__(self, config: Dict[str, Any]) -> Tuple[float, Dict[str, Any]]: ...
 
@@ -56,6 +62,7 @@ class Trial:
     error: Optional[str] = None
     source: str = "fresh"  # fresh | cache (persistent) — memo hits reuse the Trial
     status: str = "ok"  # ok | error | timeout — timeouts are NOT generic failures
+    fidelity: float = 1.0  # fraction of the full evaluation this trial paid
 
     @property
     def ok(self) -> bool:
@@ -82,6 +89,23 @@ def config_key(config: Dict[str, Any]) -> str:
 def config_hash(config: Dict[str, Any]) -> str:
     """Short stable hash of :func:`config_key` — the persistent-cache key."""
     return hashlib.sha256(config_key(config).encode()).hexdigest()[:24]
+
+
+def trial_key(config: Dict[str, Any], fidelity: float = 1.0) -> str:
+    """Memo/log identity of a (config, fidelity) evaluation. Full fidelity
+    is byte-identical to :func:`config_key` — pre-fidelity caches, memos,
+    and logs keep their exact keys — while a low-rung evaluation gets a
+    distinct identity so it can never replay as the full measurement."""
+    key = config_key(config)
+    if fidelity >= 1.0:
+        return key
+    return f"{key}|fidelity={fidelity:g}"
+
+
+def trial_hash(config: Dict[str, Any], fidelity: float = 1.0) -> str:
+    """Persistent-cache key for a (config, fidelity) evaluation; equals
+    :func:`config_hash` at full fidelity."""
+    return hashlib.sha256(trial_key(config, fidelity).encode()).hexdigest()[:24]
 
 
 # legacy name used by the old cmpe module
@@ -122,6 +146,12 @@ class TrialScheduler:
         self._memo: Dict[str, Trial] = {}
         self._log_lock = threading.Lock()
         self._batch_tag = ""  # provenance stamped into persisted records
+        # async submit/poll state: tickets are handed out in submission
+        # order; a completion resolves every ticket of its trial key at once
+        self._next_ticket = 0
+        self._ready: List[Tuple[int, Trial]] = []
+        self._inflight: Dict[str, List[int]] = {}
+        self._inflight_info: Dict[str, Tuple[Dict[str, Any], float, str]] = {}
         # cache-accounting counters (the engine tests assert on these)
         self.fresh_evaluations = 0
         self.memo_hits = 0
@@ -148,7 +178,9 @@ class TrialScheduler:
 
     # ------------------------------------------------------------------- api
 
-    def evaluate(self, config: Dict[str, Any], tag: str = "") -> float:
+    def evaluate(
+        self, config: Dict[str, Any], tag: str = "", fidelity: float = 1.0
+    ) -> float:
         """Tune the platform to ``config``, run the job, return execution
         time. Logs every call (the one-trial path the old CMPE exposed).
 
@@ -156,50 +188,34 @@ class TrialScheduler:
         the deadline keeps its real measurement on the Trial (and in the
         cache) but scores as ``infeasible_time`` here, so legacy callers
         comparing bare floats never crown a deadline-busting config."""
-        trial = self.evaluate_batch([config], tag=tag)[0]
+        trial = self.evaluate_batch([config], tag=tag, fidelity=fidelity)[0]
         return self.infeasible_time if trial.timed_out else trial.time_s
 
     def evaluate_batch(
-        self, configs: Sequence[Dict[str, Any]], tag: str = ""
+        self, configs: Sequence[Dict[str, Any]], tag: str = "",
+        fidelity: float = 1.0,
     ) -> List[Trial]:
-        """Evaluate a batch, returning one Trial per config **in input
-        order**. Duplicates (within the batch or vs. earlier batches) are
-        served from the memo; persistent-cache hits cost nothing fresh."""
+        """Evaluate a batch at one ``fidelity``, returning one Trial per
+        config **in input order**. Duplicates (within the batch or vs.
+        earlier batches) are served from the memo; persistent-cache hits
+        cost nothing fresh. Fidelity is part of a trial's identity: a
+        low-rung record never replays as the full-fidelity measurement (and
+        vice versa)."""
         self._batch_tag = tag
-        keys = [config_key(c) for c in configs]
+        keys = [trial_key(c, fidelity) for c in configs]
         plan: List[Tuple[str, Dict[str, Any]]] = []  # unique keys needing a run
         first_served = set()  # keys whose first occurrence is logged below
         for k, c in zip(keys, configs):
             if k in self._memo or k in first_served:
                 continue
-            hit = self._persistent.get(config_hash(c))
-            if hit is not None:
-                # replay preserves the measurement but re-judges a persisted
-                # over-deadline record against THIS session's deadline: a
-                # cache written under a tight timeout must not permanently
-                # poison configs whose measured wall now fits
-                status = hit.get("status", "ok")
-                error = hit.get("error")
-                if status == "timeout":
-                    rec_wall = float(hit.get("wall_s", INFEASIBLE))
-                    if self.timeout_s is None or rec_wall <= self.timeout_s:
-                        status, error = "ok", None
-                trial = Trial(
-                    dict(c), float(hit["time_s"]), dict(hit.get("info", {})),
-                    wall_s=0.0, source="cache", error=error, status=status,
-                )
-                self.cache_hits += 1
-                self.trials.append(trial)
-                self._memo[k] = trial
-                self._log(trial, tag=tag, cached=True)
-            else:
+            if self._replay(c, fidelity, tag) is None:
                 plan.append((k, c))
             first_served.add(k)
 
         if plan:
             # how/where fresh trials run is the backend's business: inline
             # (threads, soft timeouts) or subprocess (hard SIGKILL deadlines)
-            fresh = self._backend.run_batch(plan)
+            fresh = self._backend.run_batch(plan, fidelity=fidelity)
             for k, trial in fresh:
                 self.fresh_evaluations += 1
                 if trial.timed_out:
@@ -223,6 +239,161 @@ class TrialScheduler:
                 self._log(trial, tag=tag, cached=True)
         return out
 
+    def _replay(
+        self, config: Dict[str, Any], fidelity: float, tag: str
+    ) -> Optional[Trial]:
+        """Serve one (config, fidelity) from the persistent cache if it is
+        there. The replay preserves the measurement but re-judges a persisted
+        over-deadline record against THIS session's (rung-scaled) deadline: a
+        cache written under a tight timeout must not permanently poison
+        configs whose measured wall now fits."""
+        hit = self._persistent.get(trial_hash(config, fidelity))
+        if hit is None:
+            return None
+        status = hit.get("status", "ok")
+        error = hit.get("error")
+        if status == "timeout":
+            deadline = self._deadline_for(fidelity)
+            rec_wall = float(hit.get("wall_s", INFEASIBLE))
+            if deadline is None or rec_wall <= deadline:
+                status, error = "ok", None
+        trial = Trial(
+            dict(config), float(hit["time_s"]), dict(hit.get("info", {})),
+            wall_s=0.0, source="cache", error=error, status=status,
+            fidelity=float(hit.get("fidelity", 1.0)),
+        )
+        self.cache_hits += 1
+        self.trials.append(trial)
+        self._memo[trial_key(config, fidelity)] = trial
+        self._log(trial, tag=tag, cached=True)
+        return trial
+
+    def _deadline_for(self, fidelity: float) -> Optional[float]:
+        """Effective per-trial deadline: ``timeout_s`` is the budget of a
+        FULL-fidelity trial; a low-rung trial gets a proportionally shorter
+        one (a rung-0 trial inheriting the full deadline would defeat
+        successive halving)."""
+        if self.timeout_s is None:
+            return None
+        return self.timeout_s * min(max(float(fidelity), 0.0), 1.0)
+
+    # ----------------------------------------------------- async submit/poll
+
+    def submit(
+        self, config: Dict[str, Any], tag: str = "", fidelity: float = 1.0
+    ) -> int:
+        """Enqueue one (config, fidelity) evaluation without waiting for it;
+        returns a ticket :meth:`poll` resolves. This is the streaming seam
+        under asynchronous strategies (ASHA): results come back as each
+        trial finishes, never behind a batch barrier.
+
+        Memo and persistent-cache hits resolve immediately (the next poll
+        returns them without touching the backend). A key already in flight
+        is not resubmitted — every duplicate ticket resolves with the first
+        run's Trial, and duplicates are accounted as memo hits when they
+        resolve."""
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        key = trial_key(config, fidelity)
+        trial = self._memo.get(key)
+        if trial is not None:
+            self.memo_hits += 1
+            self._log(trial, tag=tag, cached=True)
+            self._ready.append((ticket, trial))
+            return ticket
+        if key in self._inflight:
+            self._inflight[key].append(ticket)
+            return ticket
+        trial = self._replay(config, fidelity, tag)
+        if trial is not None:
+            self._ready.append((ticket, trial))
+            return ticket
+        self._inflight[key] = [ticket]
+        self._inflight_info[key] = (dict(config), fidelity, tag)
+        self._backend.submit(key, dict(config), fidelity, tag)
+        return ticket
+
+    def poll(self, timeout: Optional[float] = None) -> List[Tuple[int, Trial]]:
+        """Collect completed submissions as ``(ticket, Trial)`` pairs in
+        completion order. Anything already resolved returns immediately;
+        otherwise blocks up to ``timeout`` seconds (None = until at least one
+        in-flight trial completes). Empty list = nothing in flight, or the
+        wait timed out."""
+        out, self._ready = self._ready, []
+        if self._inflight:
+            completed = self._backend.poll(0.0 if out else timeout)
+            for key, trial in completed:
+                self.fresh_evaluations += 1
+                if trial.timed_out:
+                    self.timeout_trials += 1
+                elif not trial.ok:
+                    self.error_trials += 1
+                self.trials.append(trial)
+                self._memo[key] = trial
+                _config, _fid, tag = self._inflight_info.pop(key)
+                tickets = self._inflight.pop(key)
+                self._log(trial, tag=tag, cached=False)
+                out.append((tickets[0], trial))
+                for t in tickets[1:]:  # duplicate submissions of this key
+                    self.memo_hits += 1
+                    self._log(trial, tag=tag, cached=True)
+                    out.append((t, trial))
+        return out
+
+    def run_async(self, strategy, *, patience: Optional[int] = None):
+        """Drive an asynchronous strategy (``wants_async = True``, e.g.
+        ASHA) through :meth:`submit`/:meth:`poll`: jobs stream out as
+        workers free up and results stream back one at a time — no round
+        barrier, so a promotion can dispatch while its rung peers are still
+        running.
+
+        ``patience`` counts completed trials at the highest fidelity seen so
+        far (not batches): the run stops once the best top-fidelity time has
+        not improved in N of them. Comparisons are equal-fidelity only — a
+        fast low-rung score never resets (or wins) the incumbent."""
+        evals_before = self.num_evaluations
+        timeouts_before = self.timeout_trials
+        inflight: Dict[int, Any] = {}
+        best = INFEASIBLE
+        top_fidelity = 0.0
+        stale = 0
+        stopped_early = False
+        while inflight or (not stopped_early and not strategy.done):
+            jobs: List[Any] = []
+            if not stopped_early and not strategy.done:
+                free = self.max_workers - len(inflight)
+                jobs = strategy.next_jobs(free) if free > 0 else []
+                for job in jobs:
+                    ticket = self.submit(
+                        job.config, tag=job.tag, fidelity=job.fidelity
+                    )
+                    inflight[ticket] = job
+            if not inflight:
+                break  # nothing running and nothing proposed: stuck guard
+            for ticket, trial in self.poll(timeout=None):
+                job = inflight.pop(ticket)
+                strategy.on_result(job, trial)
+                if not trial.ok:
+                    continue
+                if trial.fidelity > top_fidelity:
+                    # first completion at a new top rung IS an improvement
+                    top_fidelity, best, stale = trial.fidelity, trial.time_s, 0
+                elif trial.fidelity == top_fidelity:
+                    if trial.time_s < best:
+                        best, stale = trial.time_s, 0
+                    else:
+                        stale += 1
+                    if patience is not None and stale >= patience:
+                        stopped_early = True  # drain in-flight, submit no more
+        result = strategy.result()
+        if hasattr(result, "evaluations"):
+            result.evaluations = self.num_evaluations - evals_before
+        if hasattr(result, "stopped_early"):
+            result.stopped_early = stopped_early
+        if hasattr(result, "timeouts"):
+            result.timeouts = self.timeout_trials - timeouts_before
+        return result
+
     def run(
         self,
         strategy,
@@ -237,7 +408,14 @@ class TrialScheduler:
 
         Result accounting (``evaluations`` / ``timeouts``) reports **this
         run's deltas**, not scheduler-lifetime totals — a shared multi-cell
-        scheduler must not inflate every cell's numbers."""
+        scheduler must not inflate every cell's numbers.
+
+        An asynchronous strategy (``wants_async = True``) is routed to
+        :meth:`run_async` — same result stamping, streaming completion
+        instead of round batches (``batch_size`` does not apply there;
+        concurrency is ``max_workers``)."""
+        if getattr(strategy, "wants_async", False):
+            return self.run_async(strategy, patience=patience)
         evals_before = self.num_evaluations
         timeouts_before = self.timeout_trials
         best = INFEASIBLE
@@ -270,10 +448,14 @@ class TrialScheduler:
         return result
 
     def best(self) -> Trial:
+        """Best successful trial **at the highest fidelity any successful
+        trial reached** — a fast low-rung measurement is a different (cheaper)
+        experiment and must never be crowned over full measurements."""
         ok = [t for t in self.trials if t.ok]
         if not ok:
             raise RuntimeError("no successful trials")
-        return min(ok, key=lambda t: t.time_s)
+        top = max(t.fidelity for t in ok)
+        return min((t for t in ok if t.fidelity == top), key=lambda t: t.time_s)
 
     def close(self) -> None:
         """Release backend resources (warm subprocess workers). Idempotent;
@@ -333,6 +515,9 @@ class TrialScheduler:
         its trial budget and treats the rest as free model observations.
         Persisted timeout records are excluded — an over-deadline measurement
         must not feed a density model as if it were a clean observation.
+        Sub-fidelity records (ASHA's low rungs) are excluded too: they live
+        on a different time scale and would skew any model that mixed them
+        with full measurements.
 
         ``with_platform=True`` appends each record's **stored** cell
         namespace as a fourth element. The stored namespace is the record's
@@ -346,23 +531,31 @@ class TrialScheduler:
                 continue
             if rec.get("status", "ok") != "ok":
                 continue
+            if float(rec.get("fidelity", 1.0)) < 1.0:
+                continue
             row = (dict(rec["config"]), float(rec["time_s"]), rec.get("tag"))
             out.append(row + (rec.get("platform"),) if with_platform else row)
         return out
 
     # ------------------------------------------------------------- execution
 
-    def _run_one(self, config: Dict[str, Any]) -> Trial:
+    def _run_one(
+        self, config: Dict[str, Any], fidelity: float = 1.0,
+        tag: Optional[str] = None,
+    ) -> Trial:
         """One fresh evaluation with retry + soft timeout + penalty. The
         result is persisted immediately (not at batch end), so a session
-        killed mid-batch resumes from everything already evaluated."""
+        killed mid-batch resumes from everything already evaluated. The
+        soft deadline is rung-scaled: ``timeout_s × fidelity``."""
         t0 = time.time()
+        deadline = self._deadline_for(fidelity)
         last_err = None
         for _attempt in range(self.retries + 1):
             try:
-                t, info = self.evaluator(config)
-                trial = Trial(dict(config), float(t), info, wall_s=time.time() - t0)
-                if self.timeout_s is not None and trial.wall_s > self.timeout_s:
+                t, info = call_evaluator(self.evaluator, config, fidelity)
+                trial = Trial(dict(config), float(t), info,
+                              wall_s=time.time() - t0, fidelity=fidelity)
+                if deadline is not None and trial.wall_s > deadline:
                     # completed over the soft deadline: the measurement is
                     # real — keep and persist it (a resume must not re-pay
                     # it); status="timeout" lets strategies score it (they
@@ -370,20 +563,20 @@ class TrialScheduler:
                     trial = Trial(
                         dict(config), float(t), info, wall_s=trial.wall_s,
                         error=f"TrialTimeout: wall {trial.wall_s:.1f}s > "
-                              f"{self.timeout_s}s (soft; measurement kept)",
-                        status="timeout",
+                              f"{deadline}s (soft; measurement kept)",
+                        status="timeout", fidelity=fidelity,
                     )
-                self._persist(trial)
+                self._persist(trial, tag=tag)
                 return trial
             except Exception as e:  # noqa: BLE001 — a failed run is a trial
                 last_err = f"{type(e).__name__}: {e}"
         return Trial(
             dict(config), self.infeasible_time, {}, wall_s=time.time() - t0,
-            error=last_err, status="error",
+            error=last_err, status="error", fidelity=fidelity,
         )
 
     def _run_parallel(
-        self, plan: List[Tuple[str, Dict[str, Any]]]
+        self, plan: List[Tuple[str, Dict[str, Any]]], fidelity: float = 1.0
     ) -> List[Tuple[str, Trial]]:
         """Fan the batch over a thread pool; a future that misses the hard
         deadline becomes an infeasible trial. The batch returns promptly
@@ -405,15 +598,16 @@ class TrialScheduler:
         out: List[Tuple[str, Trial]] = []
         pool = ThreadPoolExecutor(max_workers=self.max_workers)
         starts: Dict[int, float] = {}  # future index -> monotonic start
+        timeout_s = self._deadline_for(fidelity)  # rung-scaled deadline
 
         def timed(i: int, c: Dict[str, Any]) -> Trial:
             starts[i] = time.monotonic()
-            return self._run_one(c)
+            return self._run_one(c, fidelity)
 
         batch_cap = (
-            None if self.timeout_s is None
+            None if timeout_s is None
             else time.monotonic()
-            + self.timeout_s * math.ceil(len(plan) / self.max_workers)
+            + timeout_s * math.ceil(len(plan) / self.max_workers)
         )
         try:
             futures = [
@@ -423,7 +617,7 @@ class TrialScheduler:
             for i, k, c, fut in futures:
                 trial: Optional[Trial] = None
                 while trial is None:
-                    if self.timeout_s is None:
+                    if timeout_s is None:
                         trial = fut.result()
                         break
                     now = time.monotonic()
@@ -435,20 +629,20 @@ class TrialScheduler:
                                 error="TrialTimeout: cancelled before start "
                                       "(batch cap exhausted by hung earlier "
                                       "trials)",
-                                status="timeout",
+                                status="timeout", fidelity=fidelity,
                             )
                             break
                         wait = min(0.05, max(0.0, batch_cap - now))
                     else:
-                        deadline_i = t_start + self.timeout_s
+                        deadline_i = t_start + timeout_s
                         if now >= deadline_i:
                             trial = Trial(
                                 dict(c), self.infeasible_time, {},
-                                wall_s=self.timeout_s,
+                                wall_s=timeout_s,
                                 error="TrialTimeout: no result within "
-                                      f"{self.timeout_s}s of start "
+                                      f"{timeout_s}s of start "
                                       "(worker thread abandoned)",
-                                status="timeout",
+                                status="timeout", fidelity=fidelity,
                             )
                             break
                         wait = deadline_i - now
@@ -460,8 +654,8 @@ class TrialScheduler:
                         trial = Trial(
                             dict(c), self.infeasible_time, {}, wall_s=0.0,
                             error="TrialTimeout: cancelled before start "
-                                  f"(batch deadline {self.timeout_s}s)",
-                            status="timeout",
+                                  f"(batch deadline {timeout_s}s)",
+                            status="timeout", fidelity=fidelity,
                         )
                 out.append((k, trial))
         finally:
@@ -471,23 +665,28 @@ class TrialScheduler:
 
     # ------------------------------------------------------------------- io
 
-    def _persist(self, trial: Trial):
+    def _persist(self, trial: Trial, tag: Optional[str] = None):
         # ok trials always persist; timeout trials persist only when they
         # carry a real finite measurement (a SIGKILLed / abandoned trial has
-        # nothing worth replaying). Extra keys appear ONLY on non-ok records,
-        # keeping ok-record bytes identical to every cache written before.
+        # nothing worth replaying). Extra keys appear ONLY on non-ok or
+        # sub-fidelity records, keeping full-fidelity ok-record bytes
+        # identical to every cache written before.
         measured_timeout = trial.timed_out and math.isfinite(trial.time_s)
         if not self.cache_path or not (trial.ok or measured_timeout):
             return
         rec = {
-            "key": config_hash(trial.config),
+            "key": trial_hash(trial.config, trial.fidelity),
             "platform": self.platform,
-            "tag": self._batch_tag,  # which strategy/phase proposed this
+            # which strategy/phase proposed this: async submissions carry
+            # their own tag; the batch path stamps the batch's
+            "tag": self._batch_tag if tag is None else tag,
             "ts": time.time(),
             "config": trial.config,
             "time_s": trial.time_s,
             "info": _scalar_info(trial.info),
         }
+        if trial.fidelity < 1.0:
+            rec["fidelity"] = trial.fidelity
         if not trial.ok:
             rec["status"] = trial.status
             rec["error"] = trial.error
@@ -513,12 +712,27 @@ class TrialScheduler:
             "source": trial.source,
             "info": _scalar_info(trial.info),
         }
+        if trial.fidelity < 1.0:  # full-fidelity records keep legacy shape
+            rec["fidelity"] = trial.fidelity
         with self._log_lock, self.log_path.open("a") as f:
             f.write(json.dumps(rec, default=str) + "\n")
 
 
 def _scalar_info(info: Dict[str, Any]) -> Dict[str, Any]:
     return {k: v for k, v in info.items() if isinstance(v, (int, float, str, bool))}
+
+
+def call_evaluator(
+    evaluator: Evaluator, config: Dict[str, Any], fidelity: float = 1.0
+) -> Tuple[float, Dict[str, Any]]:
+    """Invoke an evaluator, forwarding ``fidelity`` only when it declares
+    ``supports_fidelity`` — a plain evaluator never sees the kwarg. A
+    sub-fidelity request on a fidelity-blind evaluator runs the full
+    evaluation (correct, just not cheaper); its Trial still records the
+    requested fidelity so the cache identity stays consistent."""
+    if fidelity < 1.0 and getattr(evaluator, "supports_fidelity", False):
+        return evaluator(config, fidelity=fidelity)
+    return evaluator(config)
 
 
 def iter_jsonl(path: Path) -> List[Dict[str, Any]]:
@@ -588,9 +802,14 @@ def read_log(path: Path, platform: Optional[str] = None) -> List[Dict[str, Any]]
 
 
 def best_from_log(path: Path, platform: Optional[str] = None) -> Dict[str, Any]:
+    """Best successful record at the **highest fidelity the log reached** —
+    an ASHA log mixes rungs, and a fast low-rung time (a cheaper experiment
+    on a different scale) must never read as the incumbent."""
     recs = [r for r in read_log(path, platform=platform)
             if r.get("error") is None]
     if not recs:
         where = f"{path}" + (f" (platform={platform!r})" if platform else "")
         raise ValueError(f"no successful trials in log {where}")
-    return min(recs, key=lambda r: r["time_s"])
+    top = max(float(r.get("fidelity", 1.0)) for r in recs)
+    return min((r for r in recs if float(r.get("fidelity", 1.0)) == top),
+               key=lambda r: r["time_s"])

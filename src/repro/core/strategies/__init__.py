@@ -8,8 +8,10 @@
 
 Registered: ``gsft``/``grid`` (Algorithm I), ``crs`` (Algorithm II),
 ``hillclimb`` (curated §Perf moves), ``tpe``/``bayes`` (Tree-structured
-Parzen Estimator with batched acquisition). New optimizers register with
-``@register_strategy("name")`` and implement ask/tell — no executor changes.
+Parzen Estimator with batched acquisition), ``random`` (streaming baseline),
+``asha`` (asynchronous successive halving over any inner proposer). New
+optimizers register with ``@register_strategy("name")`` and implement
+ask/tell — no executor changes.
 """
 from repro.core.strategies.base import (
     STRATEGIES,
@@ -18,6 +20,7 @@ from repro.core.strategies.base import (
     make_strategy,
     register_strategy,
 )
+from repro.core.strategies.asha import AshaResult, AshaStrategy, AsyncJob
 from repro.core.strategies.crs import CRSResult, CRSStrategy
 from repro.core.strategies.gsft import GridFinerStrategy, GridResult
 from repro.core.strategies.hillclimb import (
@@ -25,9 +28,13 @@ from repro.core.strategies.hillclimb import (
     HillclimbResult,
     Move,
 )
+from repro.core.strategies.random_search import RandomResult, RandomStrategy
 from repro.core.strategies.tpe import TPEResult, TPEStrategy
 
 __all__ = [
+    "AshaResult",
+    "AshaStrategy",
+    "AsyncJob",
     "CRSResult",
     "CRSStrategy",
     "CuratedHillclimbStrategy",
@@ -36,6 +43,8 @@ __all__ = [
     "HillclimbResult",
     "Move",
     "QueueStrategy",
+    "RandomResult",
+    "RandomStrategy",
     "STRATEGIES",
     "Strategy",
     "TPEResult",

@@ -1,0 +1,254 @@
+"""ASHA — Asynchronous Successive Halving (Li et al., 2018) over the
+engine's fidelity axis.
+
+The paper's sweeps (and our TPE sessions) pay full fidelity for every
+config, so obviously-bad candidates burn the same wall-clock as the winner.
+ASHA runs *wide* at a cheap rung and promotes only what earns it: rung
+fidelities follow the geometric ladder ``min_fidelity · eta^k`` (see
+:class:`~repro.core.fidelity.FidelitySchedule`), and a config at rung ``k``
+is promoted to rung ``k+1`` the moment it ranks in the top ``ceil(n/eta)``
+of the ``n`` rung-``k`` completions — **no round barrier**: a promotion can
+dispatch while its rung peers are still running, so workers never idle
+while a rung drains. That asynchrony is the whole point (and the reason the
+scheduler grew a submit/poll seam): synchronous halving stalls every rung
+on its slowest straggler.
+
+Candidate generation is delegated to an *inner* proposer (``random`` by
+default, ``tpe`` for model-based screening). The inner strategy only ever
+sees rung-0 trials — asks map 1:1 onto rung-0 launches and only rung-0
+results are told back — so its observation model stays on one consistent
+time scale and promotions never distort its budget accounting.
+
+Determinism: the promotion/proposal stream is a pure function of the inner
+seed and the completion order (scores + arrival ranks); nothing reads a
+clock or an unseeded rng. With one worker, completion order equals
+submission order, which is what makes interrupted ASHA sessions resumable
+as exact replays.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional
+
+from repro.core.fidelity import FidelitySchedule
+from repro.core.scheduler import INFEASIBLE, Trial, config_key
+from repro.core.strategies.base import make_strategy, register_strategy
+
+
+@dataclass
+class AsyncJob:
+    """One unit of asynchronous work: evaluate ``config`` at ``fidelity``.
+    The scheduler's ``run_async`` driver hands the job back (with its Trial)
+    to ``on_result`` — the strategy's state machine keys on ``rung``."""
+
+    config: Dict[str, Any]
+    fidelity: float
+    rung: int
+    tag: str
+
+
+@dataclass
+class AshaResult:
+    best_config: Optional[Dict[str, Any]]
+    best_time: float
+    best_fidelity: float  # rung fidelity the reported best was measured at
+    rungs: List[float]
+    # per-rung observability (index = rung): launched counts promotions in,
+    # promotions[k] = configs promoted OUT of rung k
+    rung_launched: List[int]
+    rung_completed: List[int]
+    promotions: List[int]
+    proposals: int  # distinct rung-0 configs drawn from the inner proposer
+    inner: str
+    eta: float
+    evaluations: int = 0
+    timeouts: int = 0
+    stopped_early: bool = False
+
+    def rung_table(self) -> List[Dict[str, Any]]:
+        """Per-rung counters as records — what ``study.report()`` renders."""
+        return [
+            {
+                "rung": k,
+                "fidelity": f,
+                "launched": self.rung_launched[k],
+                "completed": self.rung_completed[k],
+                "promoted": self.promotions[k],
+            }
+            for k, f in enumerate(self.rungs)
+        ]
+
+
+@register_strategy("asha")
+class AshaStrategy:
+    """Asynchronous successive halving over any inner proposer.
+
+    ``max_trials`` caps *distinct rung-0 configs* (the width of the search);
+    total evaluations are larger by the promotion ladder — geometrically
+    dominated by the cheap rungs, which is where the wall-clock saving
+    comes from.
+    """
+
+    tag = "asha"
+    wants_async = True  # TrialScheduler.run routes to run_async
+    supports_history = False
+    supports_transfer = False
+    transfer_modes: tuple = ()
+    budget_kwarg = "max_trials"
+
+    def __init__(
+        self,
+        space,
+        *,
+        fixed: Optional[Dict[str, Any]] = None,
+        max_trials: int = 27,
+        inner: Any = "random",
+        min_fidelity: float = 1.0 / 9.0,
+        max_fidelity: float = 1.0,
+        eta: float = 3.0,
+        seed: int = 0,
+        **inner_kwargs: Any,
+    ):
+        self.schedule = FidelitySchedule(
+            float(min_fidelity), float(max_fidelity), float(eta)
+        )
+        self.rungs = self.schedule.rungs()
+        self.eta = float(eta)
+        self.max_trials = int(max_trials)
+        self.inner_name = inner if isinstance(inner, str) else type(inner).__name__
+        if isinstance(inner, str):
+            inner = make_strategy(
+                inner, space, fixed=fixed, seed=seed,
+                max_trials=self.max_trials, **inner_kwargs,
+            )
+        self.inner = inner
+
+        n_rungs = len(self.rungs)
+        self._configs: Dict[str, Dict[str, Any]] = {}
+        # completion records per rung: (score, arrival_rank, key) — sortable;
+        # arrival_rank breaks score ties deterministically (stream purity)
+        self._records: List[List[tuple]] = [[] for _ in range(n_rungs)]
+        self._promoted: List[set] = [set() for _ in range(n_rungs)]
+        self.rung_launched = [0] * n_rungs
+        self.rung_completed = [0] * n_rungs
+        self.promotions = [0] * n_rungs
+        self._proposed = 0
+        self._inflight = 0
+        self._arrival = 0
+        # best per rung — result() reports the highest rung with a finite best
+        self._rung_best_time = [INFEASIBLE] * n_rungs
+        self._rung_best_config: List[Optional[Dict[str, Any]]] = [None] * n_rungs
+
+    # ------------------------------------------------------------ promotion
+
+    def _promotable(self, k: int) -> List[str]:
+        """Keys at rung ``k`` currently ranked in the top ``ceil(n/eta)`` of
+        its ``n`` completions, not yet promoted, with a finite score — an
+        infeasible (timed-out / failed) trial never climbs the ladder."""
+        recs = self._records[k]
+        if not recs:
+            return []
+        top_n = math.ceil(len(recs) / self.eta)
+        ranked = sorted(recs)
+        return [
+            key for score, _, key in ranked[:top_n]
+            if math.isfinite(score) and key not in self._promoted[k]
+        ]
+
+    def _next_job(self) -> Optional[AsyncJob]:
+        # promotions first, highest rung first: finishing a promising config
+        # beats widening the base (Li et al.'s get_job order)
+        for k in range(len(self.rungs) - 2, -1, -1):
+            cand = self._promotable(k)
+            if cand:
+                key = cand[0]
+                self._promoted[k].add(key)
+                self.promotions[k] += 1
+                rung = k + 1
+                self.rung_launched[rung] += 1
+                self._inflight += 1
+                return AsyncJob(
+                    dict(self._configs[key]), self.rungs[rung], rung,
+                    f"asha/rung{rung}",
+                )
+        # otherwise widen rung 0 from the inner proposer
+        if self._proposed < self.max_trials and not self.inner.done:
+            cfgs = self.inner.ask(1)
+            if cfgs:
+                cfg = dict(cfgs[0])
+                self._configs[config_key(cfg)] = cfg
+                self._proposed += 1
+                self.rung_launched[0] += 1
+                self._inflight += 1
+                return AsyncJob(cfg, self.rungs[0], 0, "asha/rung0")
+        return None
+
+    # -------------------------------------------------------- async protocol
+
+    def next_jobs(self, n: int) -> List[AsyncJob]:
+        jobs: List[AsyncJob] = []
+        while len(jobs) < n:
+            job = self._next_job()
+            if job is None:
+                break
+            jobs.append(job)
+        return jobs
+
+    def on_result(self, job: AsyncJob, trial: Trial) -> None:
+        self._inflight -= 1
+        k = job.rung
+        self._arrival += 1
+        self._records[k].append(
+            (trial.score, self._arrival, config_key(job.config))
+        )
+        self.rung_completed[k] += 1
+        if trial.ok and trial.score < self._rung_best_time[k]:
+            self._rung_best_time[k] = trial.score
+            self._rung_best_config[k] = dict(job.config)
+        if k == 0:
+            # the inner proposer models rung-0 observations only — one
+            # consistent time scale, asks and tells 1:1
+            self.inner.tell([trial])
+
+    @property
+    def done(self) -> bool:
+        if self._inflight > 0:
+            return False  # a completion may unlock a promotion
+        if any(self._promotable(k) for k in range(len(self.rungs) - 1)):
+            return False
+        return self._proposed >= self.max_trials or self.inner.done
+
+    # ------------------------------------------------------------------ misc
+
+    def ask(self, n: Optional[int] = None) -> List[Dict[str, Any]]:
+        raise NotImplementedError(
+            "AshaStrategy is asynchronous (wants_async=True) — drive it via "
+            "TrialScheduler.run(), which routes to run_async/submit/poll"
+        )
+
+    def tell(self, trials) -> None:
+        raise NotImplementedError(
+            "AshaStrategy is asynchronous — results arrive via on_result"
+        )
+
+    def result(self) -> AshaResult:
+        best_config, best_time, best_fidelity = None, INFEASIBLE, 0.0
+        for k in range(len(self.rungs) - 1, -1, -1):
+            if self._rung_best_config[k] is not None:
+                best_config = self._rung_best_config[k]
+                best_time = self._rung_best_time[k]
+                best_fidelity = self.rungs[k]
+                break
+        return AshaResult(
+            best_config=best_config,
+            best_time=best_time,
+            best_fidelity=best_fidelity,
+            rungs=list(self.rungs),
+            rung_launched=list(self.rung_launched),
+            rung_completed=list(self.rung_completed),
+            promotions=list(self.promotions),
+            proposals=self._proposed,
+            inner=self.inner_name,
+            eta=self.eta,
+        )

@@ -169,6 +169,11 @@ class TuneOutcome:
         }
         if self.cache_stats:
             out["cache_stats"] = self.cache_stats
+        # multi-fidelity provenance: an ASHA session's per-rung counters ride
+        # into sessions.jsonl so fidelity savings are auditable after the fact
+        if hasattr(self.detail, "rung_table"):
+            out["rungs"] = self.detail.rung_table()
+            out["best_fidelity"] = self.detail.best_fidelity
         return out
 
 
@@ -230,7 +235,16 @@ def run_session(
 
     before = scheduler.stats_snapshot()
     defaults = {**space.defaults(), **(fixed or {})}
-    default_time = scheduler.evaluate(defaults, tag="default")
+    # a multi-fidelity session caps out at its schedule's top rung — the
+    # defaults yardstick must be measured at the SAME fidelity or the
+    # reduction comparison mixes scales
+    top_fidelity = (
+        float(algo_kwargs.get("max_fidelity", 1.0)) if algorithm == "asha"
+        else 1.0
+    )
+    default_time = scheduler.evaluate(
+        defaults, tag="default", fidelity=top_fidelity
+    )
 
     if algorithm in ("gsft", "grid"):
         algo_kwargs.setdefault("active_params", active_params)
@@ -246,8 +260,16 @@ def run_session(
     result = scheduler.run(strategy, batch_size=batch_size, patience=patience)
     best_config, best_time = result.best_config, result.best_time
 
+    # equal-fidelity incumbent rule: a best measured below the session's top
+    # rung (ASHA stopped before anything reached it) is a cheaper experiment
+    # on a different scale — the full-scale defaults measurement beats it by
+    # fiat rather than by a meaningless comparison
+    sub_fidelity = (
+        getattr(result, "best_fidelity", top_fidelity) < top_fidelity
+        and default_time < float("inf")
+    )
     # defaults themselves might be the optimum; the log keeps everything
-    if default_time < best_time:
+    if default_time < best_time or sub_fidelity:
         best_config, best_time = defaults, default_time
 
     after = scheduler.stats_snapshot()
@@ -532,6 +554,7 @@ class Study:
                 for rec in records.values()
                 if "config" in rec and "time_s" in rec
                 and rec.get("status", "ok") == "ok"
+                and float(rec.get("fidelity", 1.0)) >= 1.0
             )
             if trials:
                 out.append(SiblingHistory(ns, float(distance), trials))
@@ -913,7 +936,9 @@ class Study:
     def _candidates(self) -> List[Dict[str, Any]]:
         """Successful measurements across the study, one file read: cache
         records plus this process's outcomes (in-memory studies have no
-        cache file)."""
+        cache file). Sub-fidelity records (ASHA's cheap rungs) are excluded —
+        a fast low-rung time is a cheaper experiment, never the study's
+        best."""
         candidates: List[Dict[str, Any]] = []
         if self.cache_path is not None:
             candidates += [
@@ -924,6 +949,7 @@ class Study:
                 }
                 for rec in iter_jsonl(self.cache_path)
                 if rec.get("status", "ok") == "ok" and "time_s" in rec
+                and float(rec.get("fidelity", 1.0)) >= 1.0
             ]
         for out in self._outcomes:
             candidates.append({
@@ -982,7 +1008,8 @@ class Study:
             if sid in done:
                 s = done[sid].get("summary", {})
                 for k in ("default_time_s", "best_time_s", "reduction_pct",
-                          "evaluations", "timeouts", "cache_stats"):
+                          "evaluations", "timeouts", "cache_stats", "rungs",
+                          "best_fidelity"):
                     if k in s:
                         row[k] = s[k]
             rows.append(row)
@@ -994,10 +1021,16 @@ class Study:
             ):
                 best[p] = cand
         best = dict(sorted(best.items()))
+        # perf observability: the process-wide probe-compile cache counters
+        # (lazy import — report() must not pay the roofline/jax import for
+        # studies that never touched a roofline evaluator)
+        from repro.core.roofline import probe_cache_stats
+
         return {
             "study": str(self.path) if self.path else None,
             "sessions": rows,
             "best": best,
+            "probe_cache": probe_cache_stats(),
         }
 
     # -------------------------------------------------------------- plumbing

@@ -146,7 +146,7 @@ def main(argv=None):
     ap.add_argument("--cells", nargs="+", required=True,
                     metavar="ARCH:SHAPE", help="e.g. llama3.2-1b:train_4k")
     ap.add_argument("--algorithm", "--strategy", dest="algorithm", default="gsft",
-                    choices=["gsft", "crs", "tpe"])
+                    choices=["gsft", "crs", "tpe", "random", "asha"])
     ap.add_argument("--chips", type=int, default=None,
                     help="chip count for new cells (default 256); an explicit "
                          "value conflicting with a study cell's stored setup "
@@ -154,7 +154,17 @@ def main(argv=None):
     ap.add_argument("--samples", type=int, default=2)
     ap.add_argument("--budget", type=int, default=32,
                     help="tpe per-cell trial budget (shared-cache history counts)")
-    ap.add_argument("--seed", type=int, default=0, help="crs/tpe rng seed")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="crs/tpe/random/asha rng seed")
+    ap.add_argument("--inner", default="random", choices=["random", "tpe"],
+                    help="asha inner proposer drawing rung-0 candidates")
+    ap.add_argument("--eta", type=float, default=3.0,
+                    help="asha promotion factor: rung fidelities r0*eta^k, "
+                         "top 1/eta of each rung promoted")
+    ap.add_argument("--min-fidelity", type=float, default=1.0 / 9.0,
+                    help="asha cheapest rung (fraction of a full trial)")
+    ap.add_argument("--max-fidelity", type=float, default=1.0,
+                    help="asha top rung (1.0 = the full evaluation)")
     ap.add_argument("--transfer", default="off", choices=["off", "warm", "prior"],
                     help="cross-cell transfer: each cell ingests the earlier "
                          "cells' histories from the shared cache (warm = "
@@ -193,6 +203,15 @@ def main(argv=None):
         algo_kwargs = {"samples_per_param": args.samples}
     elif args.algorithm == "crs":
         algo_kwargs = {"seed": args.seed}
+    elif args.algorithm == "random":
+        algo_kwargs = {"budget": args.budget, "seed": args.seed}
+    elif args.algorithm == "asha":
+        # multi-fidelity per cell: --budget caps distinct rung-0 configs
+        algo_kwargs = {
+            "budget": args.budget, "seed": args.seed, "inner": args.inner,
+            "eta": args.eta, "min_fidelity": args.min_fidelity,
+            "max_fidelity": args.max_fidelity,
+        }
     else:  # tpe — each cell warm-starts from its own slice of the shared cache
         algo_kwargs = {"budget": args.budget, "seed": args.seed}
     from repro.launch.tune import engine_config, engine_overrides, \

@@ -132,7 +132,7 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--platform", default="train", choices=["train", "serve", "wordcount"])
     ap.add_argument("--algorithm", "--strategy", dest="algorithm", default="gsft",
-                    choices=["gsft", "crs", "tpe"])
+                    choices=["gsft", "crs", "tpe", "random", "asha"])
     ap.add_argument("--arch", default="llama3.2-1b", choices=ARCH_NAMES)
     ap.add_argument("--shape", default="train_4k", choices=list(SHAPES))
     ap.add_argument("--evaluator", default="roofline", choices=["roofline", "walltime"])
@@ -148,7 +148,16 @@ def main(argv=None):
                     help="tpe random trials before the first model round")
     ap.add_argument("--round-size", type=int, default=8,
                     help="tpe proposals per acquisition round (size --jobs to this)")
-    ap.add_argument("--seed", type=int, default=0, help="crs/tpe rng seed")
+    ap.add_argument("--seed", type=int, default=0, help="crs/tpe/random/asha rng seed")
+    ap.add_argument("--inner", default="random", choices=["random", "tpe"],
+                    help="asha inner proposer drawing rung-0 candidates")
+    ap.add_argument("--eta", type=float, default=3.0,
+                    help="asha promotion factor: rung fidelities r0*eta^k, "
+                         "top 1/eta of each rung promoted")
+    ap.add_argument("--min-fidelity", type=float, default=1.0 / 9.0,
+                    help="asha cheapest rung (fraction of a full trial)")
+    ap.add_argument("--max-fidelity", type=float, default=1.0,
+                    help="asha top rung (1.0 = the full evaluation)")
     ap.add_argument("--transfer", default="off", choices=["off", "warm", "prior"],
                     help="cross-cell transfer from sibling cells in the same "
                          "study: warm = seed candidates from sibling "
@@ -186,6 +195,16 @@ def main(argv=None):
         kwargs = dict(samples_per_param=args.samples)
     elif args.algorithm == "crs":
         kwargs = dict(m=args.m, k=args.k, max_rounds=args.rounds, seed=args.seed)
+    elif args.algorithm == "random":
+        budget = args.budget
+        kwargs = dict(seed=args.seed)
+    elif args.algorithm == "asha":
+        # multi-fidelity: --budget caps distinct rung-0 configs; promotions
+        # up the rung ladder ride on top of it
+        budget = args.budget
+        kwargs = dict(inner=args.inner, eta=args.eta,
+                      min_fidelity=args.min_fidelity,
+                      max_fidelity=args.max_fidelity, seed=args.seed)
     else:  # tpe — warm-starts its observation history from the study on re-runs
         budget = args.budget
         kwargs = dict(n_startup=args.startup, round_size=args.round_size,

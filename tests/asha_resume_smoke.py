@@ -1,0 +1,122 @@
+"""ASHA resume smoke (the CI ``asha`` job — not a pytest module).
+
+Scenario: start an ASHA Study session in a child process, SIGINT it
+mid-rung, then ``Study.resume()`` in this process and assert the resumed
+session pays only the unpaid remainder — every rung trial the interrupted
+session persisted replays from the cache (at its recorded fidelity), and
+the incumbent matches a single uninterrupted run. With one worker the
+completion order equals the submission order, so the promotion stream is an
+exact replay.
+
+    PYTHONPATH=src python tests/asha_resume_smoke.py
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+from repro.core import Study  # noqa: E402
+from repro.core.evaluators import FunctionEvaluator  # noqa: E402
+from repro.core.scheduler import iter_jsonl  # noqa: E402
+
+ASHA_KW = dict(budget=9, inner="random", eta=3.0, min_fidelity=1.0 / 9.0,
+               seed=11)
+
+
+def objective(cfg, fidelity=1.0):
+    t = (10.0
+         + abs(cfg["mesh_model_parallel"] - 8) * 0.5
+         + abs((cfg["microbatch_size"] or 256) - 32) * 0.02)
+    # mild fidelity noise: cheap rungs rank roughly, not exactly
+    if fidelity < 1.0:
+        t += 0.3 * (1.0 - fidelity) * (hashkey(cfg) % 5)
+    return t
+
+
+def hashkey(cfg):
+    return sum(ord(c) for c in json.dumps(cfg, sort_keys=True, default=str))
+
+
+def slow_objective(cfg, fidelity=1.0):
+    time.sleep(0.15)  # wide SIGINT window per trial
+    return objective(cfg, fidelity)
+
+
+def run_child(study_dir: str) -> int:
+    study = Study.open(Path(study_dir))
+    study.optimize("train", "asha", FunctionEvaluator(slow_objective),
+                   **ASHA_KW)
+    return 0
+
+
+def paid_records(cache: Path) -> int:
+    return len(iter_jsonl(cache))
+
+
+def main() -> int:
+    if len(sys.argv) > 1 and sys.argv[1] == "--child":
+        return run_child(sys.argv[2])
+
+    tmp = Path(tempfile.mkdtemp(prefix="asha-resume-smoke-"))
+    study_dir = tmp / "study"
+
+    # reference: the same seeded ASHA session, never interrupted
+    ref = Study.create(tmp / "ref").optimize(
+        "train", "asha", FunctionEvaluator(objective), **ASHA_KW)
+    ref_total = ref.cache_stats["fresh"]
+    ref_rungs = ref.summary()["rungs"]
+    assert ref_total > 6, f"reference run too small to interrupt ({ref_total})"
+    assert sum(r["promoted"] for r in ref_rungs) > 0, ref_rungs
+
+    # interrupted run: SIGINT the child once >= 4 rung trials are persisted
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    child = subprocess.Popen(
+        [sys.executable, __file__, "--child", str(study_dir)], env=env)
+    cache = study_dir / "cache.jsonl"
+    deadline = time.time() + 120
+    while time.time() < deadline:
+        if paid_records(cache) >= 4:
+            break
+        if child.poll() is not None:
+            raise SystemExit("child finished before it could be interrupted")
+        time.sleep(0.02)
+    child.send_signal(signal.SIGINT)
+    child.wait(timeout=60)
+    assert child.returncode != 0, "child should have died from the SIGINT"
+
+    paid_before = paid_records(cache)
+    assert 0 < paid_before < ref_total, (paid_before, ref_total)
+
+    # resume: replays every paid rung trial, pays only the remainder
+    study = Study.load(study_dir)
+    out = study.resume(evaluator=FunctionEvaluator(objective))
+    assert out.cache_stats["cache_hits"] == paid_before, (
+        out.cache_stats, paid_before)
+    assert out.cache_stats["fresh"] == ref_total - paid_before, (
+        out.cache_stats, ref_total, paid_before)
+    assert out.best_config == ref.best_config
+    assert out.best_time == ref.best_time
+    assert out.summary()["rungs"] == ref_rungs, (
+        out.summary()["rungs"], ref_rungs)
+
+    print(json.dumps({
+        "reference_evaluations": ref_total,
+        "paid_before_sigint": paid_before,
+        "resume_fresh": out.cache_stats["fresh"],
+        "resume_replayed": out.cache_stats["cache_hits"],
+        "rungs": ref_rungs,
+        "best_time_s": out.best_time,
+    }, indent=1))
+    print("OK: interrupted ASHA session resumed as an exact replay")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -132,6 +132,12 @@ def main(argv=None):
             rows = tables.table_asha("wordcount")
             emit(rows); all_rows += rows
 
+        if args.strategy == "all":
+            print("\n## §Kernel autotuning — default vs study-tuned block "
+                  "configs per Pallas kernel (interpret mode)")
+            rows = tables.table_kernels()
+            emit(rows); all_rows += rows
+
     print("\n## §Roofline — per (arch × shape) on the 16×16 production mesh "
           "(from the dry-run artifacts)")
     rows = tables.table_roofline()

@@ -367,6 +367,57 @@ def table_transfer(budget: int = 24, seed: int = 2) -> List[Dict[str, Any]]:
     return rows
 
 
+# ------------------------------------- kernel autotuning (default vs tuned)
+
+
+def table_kernels(budget: int = 10, seed: int = 0) -> List[Dict[str, Any]]:
+    """Default vs study-tuned block configs per Pallas kernel, interpret
+    mode (kernel bodies execute on CPU — the relative ordering of block
+    configs is what transfers to hardware, the same way the WordCount tables
+    transfer the paper's method, not its cluster). Per kernel at one
+    representative shape: a TPE session over the kernel's TunableSpace finds
+    an incumbent, then default and tuned configs are re-measured back to
+    back on the same evaluator and inputs. Rows are merged into
+    ``results/benchmarks/strategy_comparison.json``."""
+    from repro.core import Study
+    from repro.core.kernel_tune import KERNEL_SPACES, make_kernel_evaluator
+
+    shapes = {
+        "flash_attention": (2, 256, 4, 2, 64),
+        "rwkv6": (2, 160, 3, 32),
+        "ssm_scan": (2, 128, 64, 8),
+    }
+    rows = []
+    for kernel, shape in shapes.items():
+        ev = make_kernel_evaluator(kernel, shape, repeats=3, seed=seed)
+        space = KERNEL_SPACES[kernel]
+        with Study() as study:  # ephemeral: the table re-measures for itself
+            out = study.optimize(ev.platform_key(), "tpe", ev, space=space,
+                                 budget=budget, seed=seed)
+        t_default, _ = ev(space.defaults())
+        t_tuned, _ = ev(out.best_config)
+        impr = 100.0 * (t_default - t_tuned) / t_default if t_default else 0.0
+        rows.append({
+            "table": "kernels", "kernel": kernel,
+            "shape_class": ev.shape_class(), "mode": "interpret",
+            "default_config": space.defaults(),
+            "tuned_config": out.best_config,
+            "default_time_s": round(t_default, 5),
+            "tuned_time_s": round(t_tuned, 5),
+            "improvement_pct": round(impr, 2),
+            "evaluations": out.evaluations,
+        })
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    comparison = RESULTS / "strategy_comparison.json"
+    doc = json.loads(comparison.read_text()) if comparison.exists() else {
+        "platform": "wordcount", "rows": []}
+    doc["rows"] = [r for r in doc.get("rows", [])
+                   if r.get("table") != "kernels"] + rows
+    comparison.write_text(json.dumps(doc, indent=1, default=str))
+    return rows
+
+
 # --------------------------------------------------- §XI comparison table
 
 

@@ -30,20 +30,44 @@ from repro.core.space import TunableSpace
 
 
 def _accepts_fidelity(fn: Callable[..., Any]) -> bool:
-    """Whether ``fn`` can be called with a ``fidelity=`` kwarg."""
+    """Whether ``fn`` genuinely handles a ``fidelity=`` kwarg.
+
+    A bare ``**kwargs`` does NOT qualify: such a callable would silently
+    swallow the kwarg, run the full-size job, and get cached (and ranked by
+    ASHA) under a low-fidelity key as if it were the scaled one. Only an
+    explicit ``fidelity`` parameter counts — or the opt-in attribute
+    ``accepts_fidelity = True`` for wrappers that forward ``**kwargs`` to
+    something that really consumes it."""
+    if getattr(fn, "accepts_fidelity", False):
+        return True
     try:
         sig = inspect.signature(fn)
     except (TypeError, ValueError):  # builtins / C callables
         return False
     for p in sig.parameters.values():
-        if p.kind is inspect.Parameter.VAR_KEYWORD:
-            return True
         if p.name == "fidelity" and p.kind in (
             inspect.Parameter.POSITIONAL_OR_KEYWORD,
             inspect.Parameter.KEYWORD_ONLY,
         ):
             return True
     return False
+
+
+def _block_until_ready(value: Any) -> None:
+    """Force JAX async dispatch to finish before the clock is read.
+
+    Jitted jobs return as soon as the work is *enqueued*; timing the bare
+    call measures dispatch, not execution. Tolerates ``None`` and arbitrary
+    non-array returns (jax.block_until_ready tree-maps leaves and skips
+    objects without a ``block_until_ready`` method), and degrades to a no-op
+    when jax isn't importable so pure-Python jobs still time fine."""
+    if value is None:
+        return
+    try:
+        import jax
+    except ImportError:
+        return
+    jax.block_until_ready(value)
 
 
 @dataclass
@@ -108,11 +132,11 @@ class WalltimeEvaluator:
         repeats = self.repeats
         if fidelity < 1.0:
             repeats = max(1, int(round(self.repeats * fidelity)))
-        job()  # warmup / compile
+        _block_until_ready(job())  # warmup / compile — wait it out too
         best = float("inf")
         for _ in range(repeats):
             t0 = time.perf_counter()
-            job()
+            _block_until_ready(job())
             best = min(best, time.perf_counter() - t0)
         info: Dict[str, Any] = {"repeats": repeats}
         if fidelity < 1.0:

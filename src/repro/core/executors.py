@@ -34,6 +34,16 @@ Worker protocol (one duplex pipe per worker):
                        ("ok", seq, time_s, scalar_info, eval_wall_s)
                        ("err", seq, message, eval_wall_s)
 
+Device pinning (``pin_devices=N``): worker *i* is restricted to one device —
+slot ``i % N`` — by environment variables applied at the top of the worker
+process **before** the evaluator spec resolves (and therefore before the
+worker's first ``import jax``; jax reads ``CUDA_VISIBLE_DEVICES`` /
+``JAX_PLATFORMS`` / ``XLA_FLAGS`` once, at backend init). N workers then run
+N truly concurrent trials instead of serializing on device 0. A guard after
+evaluator construction checks ``len(jax.devices()) == 1`` and fails worker
+init loudly if the pin didn't take (e.g. a ``fork`` context after jax was
+already imported — the env change lands too late to matter).
+
 A worker that vanishes mid-trial surfaces as EOF on its pipe; the parent
 reaps it, records the trial, and respawns a replacement lazily. Because
 worker processes isolate all global compiler state, the subprocess backend
@@ -122,14 +132,87 @@ class EvaluatorSpec:
         return obj(*self.args, **dict(self.kwargs))
 
 
+# ----------------------------------------------------------- device pinning
+
+
+def _device_pin_env(slot: int, pin_devices: int) -> Dict[str, str]:
+    """Env vars restricting one worker to one device (slot ``slot``).
+
+    Computed parent-side (so it sees the parent's device-visibility env) but
+    applied worker-side before jax is imported. Mechanism by platform:
+
+    - CUDA/ROCm: narrow ``CUDA_VISIBLE_DEVICES`` to the slot's entry (keeps
+      the parent's explicit ordering when it set a list), so the worker's
+      device 0 *is* physical device ``slot``.
+    - TPU: one chip per process via the megacore-style bounds vars.
+    - CPU (this container, and any JAX_PLATFORMS=cpu run): a single host
+      device per worker — each worker is its own "chip".
+    """
+    cuda = os.environ.get("CUDA_VISIBLE_DEVICES", "").strip()
+    plat = os.environ.get("JAX_PLATFORMS", "").split(",")[0].strip().lower()
+    if cuda and cuda != "-1":
+        ids = [s.strip() for s in cuda.split(",") if s.strip()]
+        return {"CUDA_VISIBLE_DEVICES": ids[slot % len(ids)]}
+    if plat in ("cuda", "gpu", "rocm"):
+        return {"CUDA_VISIBLE_DEVICES": str(slot)}
+    if plat == "tpu" or os.environ.get("TPU_WORKER_ID") is not None:
+        return {
+            "TPU_VISIBLE_CHIPS": str(slot),
+            "TPU_PROCESS_BOUNDS": "1,1,1",
+            "TPU_CHIPS_PER_PROCESS_BOUNDS": "1,1,1",
+        }
+    # CPU fallback: force the host platform with exactly one device, dropping
+    # any inherited multi-device override (e.g. the roofline driver's 512)
+    xla = os.environ.get("XLA_FLAGS", "")
+    xla = " ".join(
+        f for f in xla.split()
+        if not f.startswith("--xla_force_host_platform_device_count=")
+    )
+    return {
+        "JAX_PLATFORMS": "cpu",
+        "XLA_FLAGS": (xla + " --xla_force_host_platform_device_count=1").strip(),
+    }
+
+
+def _apply_pin_guard(pin_env: Optional[Dict[str, str]]) -> Optional[str]:
+    """Worker-side post-init check: if pinning was requested and the
+    evaluator pulled jax in, the worker must see exactly one device.
+    Returns an error message (init failure) or None."""
+    if not pin_env:
+        return None
+    import sys
+
+    jax = sys.modules.get("jax")
+    if jax is None:
+        return None  # evaluator never imported jax — nothing to mispin
+    try:
+        n = len(jax.devices())
+    except Exception as e:  # noqa: BLE001 — backend init itself broke
+        return f"device pin guard: jax.devices() failed: {type(e).__name__}: {e}"
+    if n != 1:
+        return (
+            f"device pin guard: worker sees {n} devices, expected exactly 1 — "
+            "the pin env landed after jax initialised (use mp_context='spawn', "
+            "and never import jax at executors module scope)"
+        )
+    return None
+
+
 # -------------------------------------------------------------- worker child
 
 
-def _worker_main(conn, spec: EvaluatorSpec) -> None:
+def _worker_main(conn, spec: EvaluatorSpec,
+                 pin_env: Optional[Dict[str, str]] = None) -> None:
     """Worker process loop: build the evaluator once (warm), then serve
     trials until told to exit or killed."""
+    if pin_env:
+        # before spec.resolve(): jax must first initialise under these vars
+        os.environ.update(pin_env)
     try:
         evaluator = spec.resolve()
+        err = _apply_pin_guard(pin_env)
+        if err is not None:
+            raise RuntimeError(err)
     except BaseException as e:  # noqa: BLE001 — parent decides what to do
         try:
             conn.send(("init_error", f"{type(e).__name__}: {e}"))
@@ -179,10 +262,12 @@ class _Task:
 class _Worker:
     """Parent-side handle: process + pipe + readiness/task state."""
 
-    def __init__(self, ctx, spec: EvaluatorSpec, init_timeout_s: float):
+    def __init__(self, ctx, spec: EvaluatorSpec, init_timeout_s: float,
+                 pin_slot: Optional[int] = None,
+                 pin_env: Optional[Dict[str, str]] = None):
         parent_conn, child_conn = ctx.Pipe()
         self.proc = ctx.Process(
-            target=_worker_main, args=(child_conn, spec), daemon=True
+            target=_worker_main, args=(child_conn, spec, pin_env), daemon=True
         )
         self.proc.start()
         child_conn.close()
@@ -192,6 +277,8 @@ class _Worker:
         self.dead = False
         self.task: Optional[_Task] = None
         self.init_deadline = time.monotonic() + init_timeout_s
+        self.pin_slot = pin_slot
+        self.pin_env = pin_env
 
     def kill(self) -> None:
         """SIGKILL + reap. SIGKILL cannot be caught, so a wedged trial —
@@ -408,6 +495,10 @@ class SubprocessBackend(ExecutionBackend):
     - ``worker_init_timeout_s``: budget for worker startup (imports + device
       init + evaluator construction). Init failures raise — they are
       configuration errors, not trial failures.
+    - ``pin_devices``: restrict each worker to ONE device, round-robin over
+      ``N`` device slots (worker env set before its first ``import jax`` —
+      see :func:`_device_pin_env`). A respawned worker inherits the lowest
+      free slot, so a crashed worker's device is reused, not leaked.
 
     Timeout semantics: the deadline clock starts when a config is dispatched
     to an already-warm worker, so worker startup never eats trial budget. A
@@ -424,10 +515,17 @@ class SubprocessBackend(ExecutionBackend):
         spec: Optional[EvaluatorSpec] = None,
         mp_context: str = "spawn",
         worker_init_timeout_s: float = 120.0,
+        pin_devices: Optional[int] = None,
     ):
         self.spec = spec
         self.mp_context = mp_context
         self.worker_init_timeout_s = float(worker_init_timeout_s)
+        if pin_devices is not None and int(pin_devices) < 1:
+            raise ValueError(
+                f"pin_devices must be a positive device count, got {pin_devices}"
+            )
+        self.pin_devices = None if pin_devices is None else int(pin_devices)
+        self._pin_rr = 0  # round-robin cursor once every slot is occupied
         self._ctx = mp.get_context(mp_context)
         self._workers: List[_Worker] = []
         self._seq = 0
@@ -450,8 +548,23 @@ class SubprocessBackend(ExecutionBackend):
 
     # -- pool plumbing
 
+    def _next_pin_slot(self) -> int:
+        """Lowest device slot no live worker holds; round-robin overflow when
+        the pool is larger than the device count."""
+        used = {w.pin_slot for w in self._workers if not w.dead}
+        for slot in range(self.pin_devices):
+            if slot not in used:
+                return slot
+        self._pin_rr += 1
+        return self._pin_rr % self.pin_devices
+
     def _spawn(self) -> _Worker:
-        w = _Worker(self._ctx, self.spec, self.worker_init_timeout_s)
+        slot = env = None
+        if self.pin_devices is not None:
+            slot = self._next_pin_slot()
+            env = _device_pin_env(slot, self.pin_devices)
+        w = _Worker(self._ctx, self.spec, self.worker_init_timeout_s,
+                    pin_slot=slot, pin_env=env)
         self._workers.append(w)
         return w
 

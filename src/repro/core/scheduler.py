@@ -132,6 +132,7 @@ class TrialScheduler:
         retries: int = 0,
         infeasible_time: float = INFEASIBLE,
         isolation: str = "inline",
+        pin_devices: Optional[int] = None,
         backend: Optional[Any] = None,
     ):
         self.evaluator = evaluator
@@ -171,7 +172,16 @@ class TrialScheduler:
             # local import: executors imports Trial from this module
             from repro.core.executors import make_backend
 
-            backend = make_backend(isolation)
+            options: Dict[str, Any] = {}
+            if pin_devices is not None:
+                if isolation not in ("subprocess", "process"):
+                    raise ValueError(
+                        "pin_devices requires isolation='subprocess' — the "
+                        "inline thread path shares one jax runtime and "
+                        "cannot re-pin devices per trial"
+                    )
+                options["pin_devices"] = pin_devices
+            backend = make_backend(isolation, **options)
         self.isolation = getattr(backend, "name", isolation)
         self._backend = backend
         self._backend.bind(self)

@@ -72,6 +72,10 @@ class EngineConfig:
     ``patience``    stop a session when the best hasn't improved in N batches
     ``batch_size``  max configs per ask() batch (None = whole phase)
     ``clear_caches`` clear jit caches before every fresh trial (serial path)
+    ``pin_devices`` restrict each subprocess worker to one of N device slots
+                    (env set before the worker's first jax import), so N
+                    workers run N truly concurrent device trials; requires
+                    ``isolation="subprocess"``
     """
 
     workers: int = 1
@@ -81,6 +85,7 @@ class EngineConfig:
     patience: Optional[int] = None
     batch_size: Optional[int] = None
     clear_caches: bool = False
+    pin_devices: Optional[int] = None
 
     def __post_init__(self):
         if int(self.workers) < 1:
@@ -104,6 +109,18 @@ class EngineConfig:
             raise ValueError(
                 f"EngineConfig.batch_size must be >= 1 or None, got {self.batch_size}"
             )
+        if self.pin_devices is not None:
+            if int(self.pin_devices) < 1:
+                raise ValueError(
+                    f"EngineConfig.pin_devices must be >= 1 or None, "
+                    f"got {self.pin_devices}"
+                )
+            if self.isolation != "subprocess":
+                raise ValueError(
+                    "EngineConfig.pin_devices requires isolation='subprocess' "
+                    "— inline threads share one jax runtime and cannot be "
+                    "pinned per trial"
+                )
 
     def scheduler_kwargs(self) -> Dict[str, Any]:
         """Kwargs for :class:`TrialScheduler` (and the ``tune`` shim)."""
@@ -113,6 +130,7 @@ class EngineConfig:
             retries=self.retries,
             isolation=self.isolation,
             clear_caches_between_trials=self.clear_caches,
+            pin_devices=self.pin_devices,
         )
 
     def run_kwargs(self) -> Dict[str, Any]:
@@ -489,6 +507,7 @@ class Study:
         active_params: Optional[Sequence[str]] = None,
         engine: Optional[EngineConfig] = None,
         transfer: str = "off",
+        similarity: Optional[Similarity] = None,
         **algo_kwargs,
     ) -> TuneOutcome:
         """Run one tuning session against the study's storage.
@@ -503,7 +522,9 @@ class Study:
         strategy's initial candidates from sibling-cell incumbents,
         ``"prior"`` feeds sibling observations to TPE's densities with a
         distance-decayed weight (see :meth:`histories_for`); sibling trials
-        never count toward ``budget``.
+        never count toward ``budget``. ``similarity`` overrides the sibling
+        distance function — cell families whose namespaces don't follow the
+        train/serve arch:shape grammar (e.g. kernel cells) supply their own.
         """
         space = space or _space_for(platform)
         eng = engine or self.engine
@@ -513,7 +534,7 @@ class Study:
                 scheduler, platform, algorithm, space, eng,
                 budget=budget, seed=seed, fixed=fixed,
                 active_params=active_params, evaluator=evaluator,
-                transfer=transfer,
+                transfer=transfer, similarity=similarity,
                 **algo_kwargs,
             )
         finally:
@@ -577,6 +598,7 @@ class Study:
         resumes: Optional[int] = None,
         transfer: str = "off",
         siblings: Optional[List[SiblingHistory]] = None,
+        similarity: Optional[Similarity] = None,
         **algo_kwargs,
     ) -> TuneOutcome:
         misplaced = sorted({
@@ -608,7 +630,7 @@ class Study:
                 # must never claim a prior that was really warm seeding
                 transfer = modes[-1] if "warm" not in modes else "warm"
             if siblings is None:  # resume passes the recorded set instead
-                siblings = self.histories_for(platform)
+                siblings = self.histories_for(platform, similarity=similarity)
         else:
             siblings = None
         if budget is not None:

@@ -135,8 +135,11 @@ def flash_attention_fwd(
     t, hkv = k.shape[1], k.shape[2]
     scale = dh**-0.5 if scale is None else scale
 
-    block_q = min(block_q, s)
-    block_kv = min(block_kv, t)
+    # clamp to the 128-padded lengths, not the raw ones: min(block, s) on a
+    # ragged s (e.g. 200) would silently de-align the MXU tile the ops layer
+    # just snapped; the pad below absorbs the overhang instead
+    block_q = max(1, min(block_q, -(-s // 128) * 128))
+    block_kv = max(1, min(block_kv, -(-t // 128) * 128))
     pad_q = (-s) % block_q
     pad_kv = (-t) % block_kv
     if pad_q:

@@ -5,6 +5,13 @@ Routing rules (enforced here so the model layer stays simple):
     handles those; gemma-style local:global stacks scan a traced window),
   - decode (S == 1) → ValueError (the decode path is gather-bound, not a
     flash workload).
+
+Block sizes: callers that pass ``block_q``/``block_kv`` get them snapped to
+legal values (multiple of 128 for the MXU, clamped to the 128-padded
+sequence so an oversized tuner proposal can never over-allocate VMEM or
+fault). Callers that pass **nothing** get the study-tuned entry for this
+(dtype, shape-class) from ``repro.kernels.tuned_table.json`` when one
+exists, else the hardcoded defaults.
 """
 from __future__ import annotations
 
@@ -14,7 +21,21 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dtype_token, flash_shape_class, tuned_config
 from repro.kernels.flash_attention.kernel import flash_attention_fwd
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_KV = 128
+
+
+def snap_block(block: int, seq_len: int) -> int:
+    """MXU-align then bound a block size: snap down to a multiple of 128
+    (floor 128), then clamp to the 128-padded sequence length. Idempotent —
+    snapping a snapped value is a no-op, the contract ``TunableSpace.snap``
+    assumes of every knob."""
+    block = max(128, (int(block) // 128) * 128)
+    padded = -(-int(seq_len) // 128) * 128  # ceil to the 128 grid
+    return min(block, max(128, padded))
 
 
 def flash_attention(
@@ -27,8 +48,8 @@ def flash_attention(
     causal: bool = True,
     window=0,
     softcap_val: float = 0.0,
-    block_q: int = 128,
-    block_kv: int = 128,
+    block_q: Optional[int] = None,
+    block_kv: Optional[int] = None,
     scale: Optional[float] = 1.0,  # model pre-scales q
     interpret: bool = False,
 ) -> jnp.ndarray:
@@ -44,9 +65,18 @@ def flash_attention(
         if hasattr(kv_length, "shape") and getattr(kv_length, "shape", None):
             raise ValueError("pallas path needs a static scalar kv_length")
         kv_len = int(kv_length)
-    # MXU alignment: snap blocks to multiples of 128 within bounds
-    block_q = max(128, (int(block_q) // 128) * 128)
-    block_kv = max(128, (int(block_kv) // 128) * 128)
+    if block_q is None or block_kv is None:
+        tuned = tuned_config(
+            "flash_attention", dtype_token(q.dtype),
+            flash_shape_class(q.shape, k.shape),
+        ) or {}
+        if block_q is None:
+            block_q = int(tuned.get("block_q", DEFAULT_BLOCK_Q))
+        if block_kv is None:
+            block_kv = int(tuned.get("block_kv", DEFAULT_BLOCK_KV))
+    # MXU alignment + clamp to the (padded) sequence lengths
+    block_q = snap_block(block_q, q.shape[1])
+    block_kv = snap_block(block_kv, k.shape[1])
     return flash_attention_fwd(
         q, k, v,
         causal=causal, window=int(window), softcap=float(softcap_val),

@@ -1,13 +1,35 @@
-"""Jitted wrapper for the chunked WKV6 kernel."""
+"""Jitted wrapper for the chunked WKV6 kernel.
+
+``chunk`` is clamped to the sequence length (a tuner-proposed 256-token
+chunk on a 64-token input would otherwise quadruple the padded work) and,
+when the caller passes nothing, filled from the study-tuned table for this
+(dtype, shape-class)."""
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dtype_token, rwkv6_shape_class, tuned_config
 from repro.kernels.rwkv6.kernel import wkv6_chunked
 
+DEFAULT_CHUNK = 64
 
-def wkv6(r, k, v, logw, u, *, chunk: int = 64, interpret: bool = False):
+
+def snap_chunk(chunk: int, seq_len: int) -> int:
+    """Clamp a chunk length to the sequence (idempotent)."""
+    return max(1, min(int(chunk), int(seq_len)))
+
+
+def wkv6(r, k, v, logw, u, *, chunk: Optional[int] = None,
+         interpret: bool = False):
     if r.shape[1] == 1:
         raise ValueError("decode steps use the exact single-step recurrence")
+    if chunk is None:
+        tuned = tuned_config(
+            "rwkv6", dtype_token(r.dtype), rwkv6_shape_class(r.shape)
+        ) or {}
+        chunk = int(tuned.get("chunk", DEFAULT_CHUNK))
+    chunk = snap_chunk(chunk, r.shape[1])
     return wkv6_chunked(r, k, v, logw, u, chunk=chunk, interpret=interpret)

@@ -71,6 +71,11 @@ def add_engine_args(ap: argparse.ArgumentParser):
                     help="trial execution backend: inline threads (soft "
                          "timeouts, the default) or worker processes (hard "
                          "deadlines, crash containment, warm reuse)")
+    ap.add_argument("--pin-devices", dest="pin_devices", type=int, default=None,
+                    help="restrict each subprocess worker to ONE of N device "
+                         "slots (env set before the worker's first jax "
+                         "import), so N workers run N truly concurrent "
+                         "device trials; requires --isolation subprocess")
 
 
 def roofline_platform_key(platform: str, arch: str, shape: str,
@@ -91,6 +96,7 @@ def engine_overrides(args) -> dict:
         "retries": "retries",
         "patience": "patience",
         "batch": "batch_size",
+        "pin_devices": "pin_devices",
     }
     return {
         field: getattr(args, flag)

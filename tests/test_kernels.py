@@ -37,6 +37,63 @@ def test_flash_attention_sweep(dtype, tol, b, s, hq, hkv, dh, causal, window, ca
     assert err < tol, float(err)
 
 
+def _space_edges(kernel):
+    """(min, max) knob configs at the TunableSpace bounds — exactly what the
+    tuner's pow2 grids can propose at their extremes."""
+    from repro.core.kernel_tune import KERNEL_SPACES
+
+    space = KERNEL_SPACES[kernel]
+    los = {p.name: p.lo for p in space.params}
+    his = {p.name: p.hi for p in space.params}
+    return [space.snap(los), space.snap(his)]
+
+
+@pytest.mark.parametrize("config", _space_edges("flash_attention"))
+@pytest.mark.parametrize("b,s,hq,hkv,dh", [
+    (1, 200, 2, 2, 64),   # non-dividing: padded tail under every block size
+    (1, 256, 2, 2, 64),
+])
+def test_flash_attention_parity_at_space_edges(config, b, s, hq, hkv, dh):
+    """Every proposal the tuner's grid can emit — min/max blocks, blocks far
+    beyond the sequence — must stay numerically exact through the public
+    entry point's snap/clamp."""
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = jax.random.normal(ks[0], (b, s, hq, dh)) * dh**-0.5
+    k = jax.random.normal(ks[1], (b, s, hkv, dh))
+    v = jax.random.normal(ks[2], (b, s, hkv, dh))
+    out = flash_attention(q, k, v, causal=True, interpret=True, **config)
+    ref = attention_ref(q, k, v, causal=True, scale=1.0)
+    assert jnp.max(jnp.abs(out - ref)) < 1e-5
+
+
+@pytest.mark.parametrize("config", _space_edges("rwkv6"))
+def test_wkv6_parity_at_space_edges(config):
+    b, s, h, hd = 1, 48, 2, 32  # chunk hi=64 > s: clamp-to-T must handle it
+    ks = jax.random.split(jax.random.PRNGKey(5), 5)
+    r, k, v = (0.5 * jax.random.normal(ks[i], (b, s, h, hd)) for i in range(3))
+    logw = -jnp.exp(0.3 * jax.random.normal(ks[3], (b, s, h, hd)))
+    u = 0.3 * jax.random.normal(ks[4], (h, hd))
+    out = wkv6(r, k, v, logw, u, interpret=True, **config)
+    ref = wkv6_ref(r, k, v, logw, u)
+    rel = jnp.max(jnp.abs(out - ref)) / (jnp.max(jnp.abs(ref)) + 1e-9)
+    assert rel < 1e-4, float(rel)
+
+
+@pytest.mark.parametrize("config", _space_edges("ssm_scan"))
+def test_ssm_scan_parity_at_space_edges(config):
+    b, s, di, n = 1, 100, 48, 8  # s non-dividing, d_block hi=1024 > di
+    ks = jax.random.split(jax.random.PRNGKey(6), 5)
+    dt = jax.nn.softplus(jax.random.normal(ks[0], (b, s, di)))
+    u = jax.random.normal(ks[1], (b, s, di))
+    bt = jax.random.normal(ks[2], (b, s, n))
+    ct = jax.random.normal(ks[3], (b, s, n))
+    a = -jnp.exp(0.3 * jax.random.normal(ks[4], (di, n)))
+    y = selective_scan(dt, u, bt, ct, a, interpret=True, **config)
+    ref = ssm_scan_ref(dt, u, bt, ct, a)
+    rel = jnp.max(jnp.abs(y - ref)) / (jnp.max(jnp.abs(ref)) + 1e-9)
+    assert rel < 1e-4, float(rel)
+
+
 def test_flash_attention_rejects_traced_window():
     q = jnp.zeros((1, 128, 2, 64))
     with pytest.raises(ValueError):

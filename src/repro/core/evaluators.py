@@ -84,6 +84,7 @@ class FunctionEvaluator:
 
     fn: Callable[[Dict[str, Any]], float]
     spec: Optional[Any] = None  # EvaluatorSpec for subprocess workers
+    parallel_safe: bool = True  # wrapped fns are independent pure calls
 
     def __post_init__(self):
         self.supports_fidelity = _accepts_fidelity(self.fn)

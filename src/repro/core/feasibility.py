@@ -1,0 +1,338 @@
+"""Static feasibility analysis — reject doomed configs before they burn a
+worker.
+
+The paper's CMPE (and our strategies) pay full execution time for every
+sampled config, including ones that were provably doomed before launch.
+This module is the propose-time gate: a :class:`StaticPrefilter` vets a
+candidate config **without executing it**, from three kinds of evidence:
+
+  1. **Space-level validity / clamp-aliasing** — the kernel ops layer snaps
+     every proposed block size to a legal value (``snap_block`` /
+     ``snap_chunk`` / ``snap_d_block``); a proposal the snap would *change*
+     runs byte-identically to the snapped config that is already in the
+     space, so measuring it burns a worker on a duplicate. WordCount's
+     ``sort_buffer_tokens > block_tokens`` clamp is the same class.
+  2. **Analytic VMEM footprint** — each Pallas kernel exposes a
+     ``vmem_footprint`` model next to its snap helper (tiles + scratch +
+     f32 intermediates ⇒ bytes); a config whose working set exceeds the
+     per-core VMEM budget faults on hardware before producing a number.
+  3. **Analytic HBM residency** — train/serve roofline cells reuse
+     :func:`repro.core.roofline.estimate_tpu_hbm` (on a lightweight fake
+     mesh — no jax device state) plus the mesh-divisibility rule
+     ``make_tuning_mesh`` would raise on.
+
+For compiled programs there is a fourth, deeper source: AOT lowering.
+:func:`aot_memory_estimate` runs ``jax.jit(fn).lower(...)`` and feeds the
+HLO text through :func:`repro.core.hlo.parse_memory` — the peak-buffer
+estimator the cost-surrogate roadmap item trains on. It costs a trace (not
+a compile), so it is exposed as an analysis helper rather than wired into
+the per-proposal hot path.
+
+The scheduler seam: ``TrialScheduler(prefilter=...)`` calls
+``prefilter(config, platform, fidelity)`` before dispatching a fresh trial;
+a :class:`Rejection` becomes a ``status="infeasible_static"`` trial record
+(machine-readable rule + detail, persisted, replayed on resume, never
+charged a worker or counted as an evaluation) that strategies see as an
+infeasible penalty. ``--prefilter static|off`` on every CLI.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+__all__ = [
+    "PREFILTER_MODES",
+    "Rejection",
+    "StaticPrefilter",
+    "VMEM_BUDGET",
+    "aot_memory_estimate",
+    "make_prefilter",
+]
+
+# Per-core VMEM working-set budget (bytes) the kernel footprint models are
+# checked against — the ~16 MiB of a TPU v4/v5 core.
+VMEM_BUDGET = 16 * 1024 ** 2
+
+PREFILTER_MODES = ("off", "static")
+
+
+@dataclass(frozen=True)
+class Rejection:
+    """Why a config was statically rejected, machine-readable.
+
+    ``rule`` is the stable identifier strategies/analysis key on
+    (``snap_alias`` / ``vmem_budget`` / ``hbm_budget`` /
+    ``mesh_divisibility``); ``reason`` the human-readable sentence;
+    ``detail`` scalar evidence (proposed vs. snapped values, estimated vs.
+    budget bytes) that rides into the trial record's info dict."""
+
+    rule: str
+    reason: str
+    detail: Dict[str, Any] = field(default_factory=dict)
+
+
+# A prefilter is any callable with this shape; None (or make_prefilter("off"))
+# disables the gate.
+Prefilter = Callable[[Dict[str, Any], str, float], Optional[Rejection]]
+
+
+def make_prefilter(mode: str, **kwargs: Any) -> Optional["StaticPrefilter"]:
+    """Resolve a ``--prefilter`` mode string: ``"off"`` → None (no gate),
+    ``"static"`` → a :class:`StaticPrefilter`."""
+    if mode in (None, "off"):
+        return None
+    if mode == "static":
+        return StaticPrefilter(**kwargs)
+    raise ValueError(
+        f"unknown prefilter mode {mode!r} (one of {PREFILTER_MODES})"
+    )
+
+
+class StaticPrefilter:
+    """The ``--prefilter static`` gate: dispatches on the cell's cache
+    namespace (which carries the full workload identity — kernel + dtype +
+    shape dims for kernel cells, arch:shape@chips for roofline cells) and
+    applies the matching rule set. Namespaces it has no model for pass
+    clean: the gate only ever rejects what it can *prove* doomed."""
+
+    def __init__(
+        self,
+        vmem_budget: int = VMEM_BUDGET,
+        hbm_budget: Optional[int] = None,
+    ):
+        self.vmem_budget = int(vmem_budget)
+        self.hbm_budget = hbm_budget  # None = roofline's HBM_CAP
+
+    def __call__(
+        self, config: Dict[str, Any], platform: str, fidelity: float = 1.0
+    ) -> Optional[Rejection]:
+        if platform.startswith("kernel/"):
+            return self.check_kernel(config, platform)
+        if platform == "wordcount" or platform.startswith("wordcount/"):
+            return self.check_wordcount(config)
+        if platform.startswith(("train/", "serve/")):
+            return self.check_roofline(config, platform)
+        return None
+
+    # ------------------------------------------------------------- kernels
+
+    def check_kernel(
+        self, config: Dict[str, Any], platform: str
+    ) -> Optional[Rejection]:
+        """Kernel-cell rules, resolved purely from the namespace string:
+        ``kernel/<kernel>.<dtype>:<shape-class>`` carries every dim the snap
+        helpers and footprint models need."""
+        from repro.core.kernel_tune import parse_kernel_platform
+        from repro.kernels import parse_shape_class
+
+        try:
+            kernel, dtype, shape_class = parse_kernel_platform(platform)
+        except ValueError:
+            return None
+        dims = parse_shape_class(shape_class)
+        dtype_bytes = {"f32": 4, "f16": 2, "bf16": 2, "f64": 8}.get(dtype, 4)
+
+        if kernel == "flash_attention":
+            from repro.kernels.flash_attention.ops import (
+                snap_block,
+                vmem_footprint,
+            )
+
+            s, dh = dims.get("s", 0), dims.get("d", 0)
+            for knob in ("block_q", "block_kv"):
+                if knob not in config:
+                    continue
+                snapped = snap_block(int(config[knob]), s)
+                if snapped != int(config[knob]):
+                    return _alias(knob, config[knob], snapped, s)
+            bq = int(config.get("block_q", 128))
+            bkv = int(config.get("block_kv", 128))
+            return self._vmem(vmem_footprint(bq, bkv, dh, dtype_bytes))
+
+        if kernel == "rwkv6":
+            from repro.kernels.rwkv6.ops import snap_chunk, vmem_footprint
+
+            s, hd = dims.get("s", 0), dims.get("d", 0)
+            if "chunk" in config:
+                snapped = snap_chunk(int(config["chunk"]), s)
+                if snapped != int(config["chunk"]):
+                    return _alias("chunk", config["chunk"], snapped, s)
+            return self._vmem(
+                vmem_footprint(int(config.get("chunk", 64)), hd, dtype_bytes)
+            )
+
+        # ssm_scan
+        from repro.kernels.ssm_scan.ops import (
+            snap_chunk,
+            snap_d_block,
+            vmem_footprint,
+        )
+
+        s, di, n = dims.get("s", 0), dims.get("di", 0), dims.get("n", 0)
+        if "chunk" in config:
+            snapped = snap_chunk(int(config["chunk"]), s)
+            if snapped != int(config["chunk"]):
+                return _alias("chunk", config["chunk"], snapped, s)
+        if "d_block" in config:
+            snapped = snap_d_block(int(config["d_block"]), di)
+            if snapped != int(config["d_block"]):
+                return _alias("d_block", config["d_block"], snapped, di)
+        return self._vmem(vmem_footprint(
+            int(config.get("chunk", 128)), int(config.get("d_block", 256)),
+            n, dtype_bytes,
+        ))
+
+    def _vmem(self, est_bytes: int) -> Optional[Rejection]:
+        if est_bytes <= self.vmem_budget:
+            return None
+        return Rejection(
+            rule="vmem_budget",
+            reason=(
+                f"estimated VMEM working set {est_bytes} B exceeds the "
+                f"{self.vmem_budget} B per-core budget"
+            ),
+            detail={
+                "vmem_est_bytes": int(est_bytes),
+                "vmem_budget_bytes": int(self.vmem_budget),
+            },
+        )
+
+    # ----------------------------------------------------------- wordcount
+
+    @staticmethod
+    def check_wordcount(config: Dict[str, Any]) -> Optional[Rejection]:
+        """WordCount's map task clamps the sort buffer to the block
+        (``buf = min(max(sort_buffer, 1), block)``) — a proposal with
+        ``sort_buffer_tokens > block_tokens`` runs byte-identically to the
+        clamped config already in the space."""
+        if "sort_buffer_tokens" not in config or "block_tokens" not in config:
+            return None
+        buf, block = int(config["sort_buffer_tokens"]), int(config["block_tokens"])
+        if buf <= block:
+            return None
+        return Rejection(
+            rule="snap_alias",
+            reason=(
+                f"sort_buffer_tokens={buf} is clamped to block_tokens={block} "
+                "at run time — the proposal aliases the clamped config"
+            ),
+            detail={
+                "param": "sort_buffer_tokens",
+                "proposed": buf,
+                "effective": block,
+            },
+        )
+
+    # ------------------------------------------------------ roofline cells
+
+    def check_roofline(
+        self, config: Dict[str, Any], platform: str
+    ) -> Optional[Rejection]:
+        """Train/serve cell rules: mesh divisibility (the factorization
+        ``make_tuning_mesh`` would raise on) and the analytic per-chip HBM
+        residency vs. the 16 GiB cap — computed on a fake mesh, no jax
+        device state, no compile."""
+        from repro.configs.archs import get_arch
+        from repro.configs.base import SHAPES
+        from repro.core import roofline as rl
+        from repro.core.space import SPACES
+        from repro.core.transfer import parse_namespace
+
+        cell = parse_namespace(platform)
+        if cell.arch is None or cell.shape is None:
+            return None
+        try:
+            arch = get_arch(cell.arch)
+            shape = SHAPES[cell.shape]
+        except (KeyError, ValueError):
+            return None  # not a cell this gate has a model for
+        space = SPACES[cell.base]
+        run = space.to_run_config(config)
+        chips = int(cell.chips)
+        mp = min(int(config.get(
+            "mesh_model_parallel", run.mesh_model_parallel)), chips)
+        if chips % mp:
+            return Rejection(
+                rule="mesh_divisibility",
+                reason=(
+                    f"mesh_model_parallel={mp} does not divide the cell's "
+                    f"{chips} chips — no mesh factorization exists"
+                ),
+                detail={"mesh_model_parallel": mp, "chips": chips},
+            )
+        run = run.replace(mesh_model_parallel=mp)
+        est = rl.estimate_tpu_hbm(arch, run, shape, _FakeMesh(chips, mp))
+        cap = rl.HBM_CAP if self.hbm_budget is None else int(self.hbm_budget)
+        total = est["total_gib"] * 1024 ** 3
+        if total <= cap:
+            return None
+        return Rejection(
+            rule="hbm_budget",
+            reason=(
+                f"estimated per-chip HBM {est['total_gib']:.2f} GiB exceeds "
+                f"the {cap / 1024 ** 3:.0f} GiB cap — the config OOMs before "
+                "producing a number"
+            ),
+            detail={
+                "hbm_est_gib": round(float(est["total_gib"]), 3),
+                "hbm_budget_gib": round(cap / 1024 ** 3, 3),
+                "chips": chips,
+            },
+        )
+
+
+class _FakeMesh:
+    """The two attributes :func:`estimate_tpu_hbm` reads off a mesh
+    (axis names/sizes and total device count) without constructing jax
+    device state — the prefilter must stay execution-free."""
+
+    class _Devices:
+        def __init__(self, shape):
+            self.shape = shape
+            self.size = 1
+            for d in shape:
+                self.size *= d
+
+    def __init__(self, chips: int, model_parallel: int):
+        self.axis_names = ("data", "model")
+        self.devices = self._Devices((chips // model_parallel, model_parallel))
+
+
+def _alias(param: str, proposed: Any, effective: int, bound: int) -> Rejection:
+    return Rejection(
+        rule="snap_alias",
+        reason=(
+            f"{param}={proposed} snaps to {effective} for this shape "
+            f"(bound {bound}) — the proposal aliases a config already in "
+            "the space"
+        ),
+        detail={
+            "param": param,
+            "proposed": int(proposed),
+            "effective": int(effective),
+        },
+    )
+
+
+# ------------------------------------------------------------- AOT analysis
+
+
+def aot_memory_estimate(fn: Callable[..., Any], *args: Any, **kwargs: Any):
+    """Lower ``fn`` ahead of time and statically estimate its peak buffer
+    bytes from the HLO text: ``jax.jit(fn).lower(*args)`` →
+    :func:`repro.core.hlo.parse_memory`. Costs a trace, not a compile or an
+    execution — the deep-analysis path for compiled (train/serve) programs
+    and the feature extractor the roadmap's cost surrogate trains on.
+
+    Returns a :class:`repro.core.hlo.MemoryEstimate`."""
+    import jax
+
+    from repro.core.hlo import parse_memory
+
+    lowered = jax.jit(fn).lower(*args, **kwargs)
+    try:
+        # lowered.as_text() is StableHLO MLIR; parse_memory wants HLO text
+        text = lowered.compiler_ir(dialect="hlo").as_hlo_text()
+    except Exception:
+        text = lowered.as_text()
+    return parse_memory(text)

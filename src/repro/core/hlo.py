@@ -140,6 +140,72 @@ class CollectiveStats:
         }
 
 
+# any op definition line: `%name = <shape> opcode(`
+_ANY_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*"
+    r"(?P<shape>\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"(?P<op>[\w\-]+)\("
+)
+
+
+@dataclass
+class MemoryEstimate:
+    """Static peak-buffer estimate for one HLO module, from text alone.
+
+    ``peak_bytes`` is the conservative residency model the feasibility gate
+    checks: parameters and the root output are live for the whole program,
+    plus the single largest temporary (XLA reuses temp buffers, so summing
+    every intermediate would wildly over-reject)."""
+
+    param_bytes: int = 0
+    output_bytes: int = 0
+    max_temp_bytes: int = 0
+    total_temp_bytes: int = 0
+    op_count: int = 0
+
+    @property
+    def peak_bytes(self) -> int:
+        return self.param_bytes + self.output_bytes + self.max_temp_bytes
+
+    def summary(self) -> Dict:
+        return {
+            "param_bytes": self.param_bytes,
+            "output_bytes": self.output_bytes,
+            "max_temp_bytes": self.max_temp_bytes,
+            "total_temp_bytes": self.total_temp_bytes,
+            "peak_bytes": self.peak_bytes,
+            "op_count": self.op_count,
+        }
+
+
+def parse_memory(hlo_text: str) -> MemoryEstimate:
+    """Peak-buffer estimator over HLO text (post-partitioning: shapes are
+    per-device). Pure text analysis — no executable, no
+    ``memory_analysis()`` — so it works on any ``jax.jit(...).lower()``
+    output before paying a compile.
+
+    Accounting: ``parameter`` shapes are inputs, the ``ROOT`` shape is the
+    live output, everything else is a temp. Malformed or non-array shape
+    strings contribute zero bytes (the ``_shape_bytes`` regex only consumes
+    well-formed ``dtype[dims]`` arrays); empty text yields the zero
+    estimate."""
+    est = MemoryEstimate()
+    for line in hlo_text.splitlines():
+        m = _ANY_OP_RE.match(line)
+        if m is None:
+            continue
+        nbytes = _shape_bytes(m.group("shape"))
+        est.op_count += 1
+        if m.group("op") == "parameter":
+            est.param_bytes += nbytes
+        elif line.lstrip().startswith("ROOT"):
+            est.output_bytes += nbytes
+        else:
+            est.total_temp_bytes += nbytes
+            est.max_temp_bytes = max(est.max_temp_bytes, nbytes)
+    return est
+
+
 def parse_collectives(hlo_text: str) -> CollectiveStats:
     stats = CollectiveStats()
     seen_done = set()

@@ -60,8 +60,12 @@ class Trial:
     info: Dict[str, Any] = field(default_factory=dict)
     wall_s: float = 0.0
     error: Optional[str] = None
-    source: str = "fresh"  # fresh | cache (persistent) — memo hits reuse the Trial
-    status: str = "ok"  # ok | error | timeout — timeouts are NOT generic failures
+    # fresh | cache (persistent) | prefilter (statically rejected) — memo
+    # hits reuse the Trial
+    source: str = "fresh"
+    # ok | error | timeout | infeasible_static — timeouts are NOT generic
+    # failures, and a statically-rejected config never ran at all
+    status: str = "ok"
     fidelity: float = 1.0  # fraction of the full evaluation this trial paid
 
     @property
@@ -134,9 +138,18 @@ class TrialScheduler:
         isolation: str = "inline",
         pin_devices: Optional[int] = None,
         backend: Optional[Any] = None,
+        prefilter: Optional[Any] = None,
     ):
         self.evaluator = evaluator
         self.platform = platform
+        # static feasibility gate: a mode string ("off"/"static") or any
+        # callable (config, platform, fidelity) -> Optional[Rejection];
+        # None/off = every config runs
+        if isinstance(prefilter, str):
+            from repro.core.feasibility import make_prefilter
+
+            prefilter = make_prefilter(prefilter)
+        self.prefilter = prefilter
         self.log_path = Path(log_path) if log_path else None
         self.clear_caches = clear_caches_between_trials
         self.max_workers = max(1, int(max_workers))
@@ -161,6 +174,9 @@ class TrialScheduler:
         # reported distinctly, not folded into the generic failure count
         self.timeout_trials = 0
         self.error_trials = 0
+        # configs the static prefilter rejected at propose time — they never
+        # charged a worker and are excluded from every evaluation count
+        self.infeasible_static = 0
         if self.log_path:
             self.log_path.parent.mkdir(parents=True, exist_ok=True)
         self.cache_path = Path(cache_path) if cache_path else None
@@ -219,7 +235,11 @@ class TrialScheduler:
             if k in self._memo or k in first_served:
                 continue
             if self._replay(c, fidelity, tag) is None:
-                plan.append((k, c))
+                rejection = self._prefilter_check(c, fidelity)
+                if rejection is not None:
+                    self._reject(c, fidelity, tag, rejection)
+                else:
+                    plan.append((k, c))
             first_served.add(k)
 
         if plan:
@@ -262,6 +282,11 @@ class TrialScheduler:
             return None
         status = hit.get("status", "ok")
         error = hit.get("error")
+        if status == "infeasible_static" and self.prefilter is None:
+            # the gate's verdicts bind only while the gate is on: a session
+            # running --prefilter off measures the config for real instead
+            # of replaying another session's static rejection
+            return None
         if status == "timeout":
             deadline = self._deadline_for(fidelity)
             rec_wall = float(hit.get("wall_s", INFEASIBLE))
@@ -273,9 +298,42 @@ class TrialScheduler:
             fidelity=float(hit.get("fidelity", 1.0)),
         )
         self.cache_hits += 1
+        if trial.status == "infeasible_static":
+            # a replayed rejection still isn't an evaluation — keep the
+            # counter in step so the accounting subtraction stays exact
+            self.infeasible_static += 1
         self.trials.append(trial)
         self._memo[trial_key(config, fidelity)] = trial
         self._log(trial, tag=tag, cached=True)
+        return trial
+
+    def _prefilter_check(self, config: Dict[str, Any], fidelity: float):
+        """Run the static feasibility gate on one proposal (None = passes)."""
+        if self.prefilter is None:
+            return None
+        return self.prefilter(config, self.platform, fidelity)
+
+    def _reject(
+        self, config: Dict[str, Any], fidelity: float, tag: str, rejection
+    ) -> Trial:
+        """Record one statically-rejected proposal: an
+        ``status="infeasible_static"`` trial carrying the machine-readable
+        rule + evidence, memoized, persisted (it replays on resume) and
+        logged — but never dispatched to a worker and never counted as an
+        evaluation. Strategies rank it by ``Trial.score`` = infeasible, so
+        TPE/CRS steer away and ASHA never promotes it."""
+        trial = Trial(
+            dict(config), INFEASIBLE,
+            {"prefilter_rule": rejection.rule, **rejection.detail},
+            wall_s=0.0, source="prefilter",
+            error=f"InfeasibleStatic[{rejection.rule}]: {rejection.reason}",
+            status="infeasible_static", fidelity=fidelity,
+        )
+        self.infeasible_static += 1
+        self.trials.append(trial)
+        self._memo[trial_key(config, fidelity)] = trial
+        self._persist(trial, tag=tag)
+        self._log(trial, tag=tag, cached=False)
         return trial
 
     def _deadline_for(self, fidelity: float) -> Optional[float]:
@@ -316,6 +374,11 @@ class TrialScheduler:
             return ticket
         trial = self._replay(config, fidelity, tag)
         if trial is not None:
+            self._ready.append((ticket, trial))
+            return ticket
+        rejection = self._prefilter_check(config, fidelity)
+        if rejection is not None:
+            trial = self._reject(config, fidelity, tag, rejection)
             self._ready.append((ticket, trial))
             return ticket
         self._inflight[key] = [ticket]
@@ -361,7 +424,7 @@ class TrialScheduler:
         far (not batches): the run stops once the best top-fidelity time has
         not improved in N of them. Comparisons are equal-fidelity only — a
         fast low-rung score never resets (or wins) the incumbent."""
-        evals_before = self.num_evaluations
+        evals_before = self.num_evaluations - self.infeasible_static
         timeouts_before = self.timeout_trials
         inflight: Dict[int, Any] = {}
         best = INFEASIBLE
@@ -397,7 +460,10 @@ class TrialScheduler:
                         stopped_early = True  # drain in-flight, submit no more
         result = strategy.result()
         if hasattr(result, "evaluations"):
-            result.evaluations = self.num_evaluations - evals_before
+            # statically-rejected proposals are not evaluations
+            result.evaluations = (
+                self.num_evaluations - self.infeasible_static - evals_before
+            )
         if hasattr(result, "stopped_early"):
             result.stopped_early = stopped_early
         if hasattr(result, "timeouts"):
@@ -426,7 +492,7 @@ class TrialScheduler:
         concurrency is ``max_workers``)."""
         if getattr(strategy, "wants_async", False):
             return self.run_async(strategy, patience=patience)
-        evals_before = self.num_evaluations
+        evals_before = self.num_evaluations - self.infeasible_static
         timeouts_before = self.timeout_trials
         best = INFEASIBLE
         stale = 0
@@ -450,7 +516,10 @@ class TrialScheduler:
                 break
         result = strategy.result()
         if hasattr(result, "evaluations"):
-            result.evaluations = self.num_evaluations - evals_before
+            # statically-rejected proposals are not evaluations
+            result.evaluations = (
+                self.num_evaluations - self.infeasible_static - evals_before
+            )
         if hasattr(result, "stopped_early"):
             result.stopped_early = stopped_early
         if hasattr(result, "timeouts"):
@@ -504,15 +573,18 @@ class TrialScheduler:
             "trials": self.num_evaluations,
             "timeouts": self.timeout_trials,
             "errors": self.error_trials,
+            "infeasible_static": self.infeasible_static,
         }
 
     def stats_snapshot(self) -> Dict[str, int]:
         """Point-in-time counters for per-session delta accounting: a Study
         (or the tune shim) subtracts two snapshots so a shared multi-session
         scheduler reports each session's own numbers, never lifetime totals.
-        Same counters as :meth:`run_stats` under the outcome-facing name."""
+        Same counters as :meth:`run_stats` under the outcome-facing name —
+        except ``evaluations`` excludes statically-rejected proposals (they
+        never ran; they get their own ``infeasible_static`` counter)."""
         stats = self.run_stats()
-        stats["evaluations"] = stats.pop("trials")
+        stats["evaluations"] = stats.pop("trials") - stats["infeasible_static"]
         return stats
 
     def cached_observations(
@@ -682,7 +754,8 @@ class TrialScheduler:
         # sub-fidelity records, keeping full-fidelity ok-record bytes
         # identical to every cache written before.
         measured_timeout = trial.timed_out and math.isfinite(trial.time_s)
-        if not self.cache_path or not (trial.ok or measured_timeout):
+        rejected = trial.status == "infeasible_static"
+        if not self.cache_path or not (trial.ok or measured_timeout or rejected):
             return
         rec = {
             "key": trial_hash(trial.config, trial.fidelity),

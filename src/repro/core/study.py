@@ -76,6 +76,10 @@ class EngineConfig:
                     (env set before the worker's first jax import), so N
                     workers run N truly concurrent device trials; requires
                     ``isolation="subprocess"``
+    ``prefilter``   static feasibility gate at propose time: ``"static"``
+                    rejects provably-doomed configs (clamp aliases, VMEM/HBM
+                    overflow) as ``infeasible_static`` records without
+                    charging a worker; ``"off"`` (default) runs everything
     """
 
     workers: int = 1
@@ -86,6 +90,7 @@ class EngineConfig:
     batch_size: Optional[int] = None
     clear_caches: bool = False
     pin_devices: Optional[int] = None
+    prefilter: str = "off"
 
     def __post_init__(self):
         if int(self.workers) < 1:
@@ -121,6 +126,13 @@ class EngineConfig:
                     "— inline threads share one jax runtime and cannot be "
                     "pinned per trial"
                 )
+        from repro.core.feasibility import PREFILTER_MODES
+
+        if self.prefilter not in PREFILTER_MODES:
+            raise ValueError(
+                f"EngineConfig.prefilter must be one of {PREFILTER_MODES}, "
+                f"got {self.prefilter!r}"
+            )
 
     def scheduler_kwargs(self) -> Dict[str, Any]:
         """Kwargs for :class:`TrialScheduler` (and the ``tune`` shim)."""
@@ -131,6 +143,7 @@ class EngineConfig:
             isolation=self.isolation,
             clear_caches_between_trials=self.clear_caches,
             pin_devices=self.pin_devices,
+            prefilter=self.prefilter,
         )
 
     def run_kwargs(self) -> Dict[str, Any]:
@@ -165,6 +178,9 @@ class TuneOutcome:
     # or multi-session scheduler must not inflate every report
     cache_stats: Optional[Dict[str, int]] = None
     timeouts: int = 0  # trials that hit the (soft) per-trial deadline
+    # proposals the static prefilter rejected without running them — their
+    # own counter, never folded into evaluations or timeouts
+    infeasible_static: int = 0
 
     @property
     def reduction_pct(self) -> float:
@@ -185,6 +201,8 @@ class TuneOutcome:
             "timeouts": self.timeouts,
             "best_config": self.best_config,
         }
+        if self.infeasible_static:
+            out["infeasible_static"] = self.infeasible_static
         if self.cache_stats:
             out["cache_stats"] = self.cache_stats
         # multi-fidelity provenance: an ASHA session's per-rung counters ride
@@ -303,6 +321,9 @@ def run_session(
             k: after[k] - before[k] for k in ("fresh", "memo_hits", "cache_hits")
         },
         timeouts=after["timeouts"] - before["timeouts"],
+        infeasible_static=(
+            after["infeasible_static"] - before["infeasible_static"]
+        ),
     )
 
 
@@ -1030,8 +1051,8 @@ class Study:
             if sid in done:
                 s = done[sid].get("summary", {})
                 for k in ("default_time_s", "best_time_s", "reduction_pct",
-                          "evaluations", "timeouts", "cache_stats", "rungs",
-                          "best_fidelity"):
+                          "evaluations", "timeouts", "infeasible_static",
+                          "cache_stats", "rungs", "best_fidelity"):
                     if k in s:
                         row[k] = s[k]
             rows.append(row)

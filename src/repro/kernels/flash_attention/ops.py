@@ -38,6 +38,20 @@ def snap_block(block: int, seq_len: int) -> int:
     return min(block, max(128, padded))
 
 
+def vmem_footprint(
+    block_q: int, block_kv: int, dh: int, dtype_bytes: int = 4
+) -> int:
+    """Analytic per-core VMEM bytes for one grid step of the kernel: the
+    q/k/v/o tiles at the input dtype, the (block_q × block_kv) score matrix
+    in f32, and the f32 scratch (accumulator + running max/denominator).
+    Monotone in both block sizes — the feasibility gate relies on that."""
+    bq, bkv, dh = int(block_q), int(block_kv), int(dh)
+    tiles = (2 * bq + 2 * bkv) * dh * int(dtype_bytes)  # q, o, k, v
+    scores = bq * bkv * 4
+    scratch = (bq * dh + 2 * bq) * 4  # acc + m/l
+    return tiles + scores + scratch
+
+
 def flash_attention(
     q: jnp.ndarray,
     k: jnp.ndarray,

@@ -22,6 +22,18 @@ def snap_chunk(chunk: int, seq_len: int) -> int:
     return max(1, min(int(chunk), int(seq_len)))
 
 
+def vmem_footprint(chunk: int, hd: int, dtype_bytes: int = 4) -> int:
+    """Analytic per-core VMEM bytes for one (batch, head, chunk) grid step:
+    the five (chunk × hd) tiles (r/k/v/logw/out) plus the u row at the input
+    dtype, the intra-chunk (chunk × chunk) f32 score/decay matrices, and the
+    (hd × hd) f32 state scratch. Monotone in ``chunk``."""
+    c, hd = int(chunk), int(hd)
+    tiles = (5 * c + 1) * hd * int(dtype_bytes)
+    scores = 2 * c * c * 4
+    scratch = hd * hd * 4
+    return tiles + scores + scratch
+
+
 def wkv6(r, k, v, logw, u, *, chunk: Optional[int] = None,
          interpret: bool = False):
     if r.shape[1] == 1:

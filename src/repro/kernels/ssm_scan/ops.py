@@ -28,6 +28,19 @@ def snap_d_block(d_block: int, di: int) -> int:
     return max(d_block, 1)
 
 
+def vmem_footprint(chunk: int, d_block: int, n: int, dtype_bytes: int = 4) -> int:
+    """Analytic per-core VMEM bytes for one (batch, d_block, chunk) grid
+    step: the dt/u/out (chunk × d_block) and B/C (chunk × n) tiles plus the
+    (d_block × n) A row at the input dtype, the (d_block × n) f32 state
+    scratch, and the f32 working tiles the in-kernel scan materializes.
+    Monotone in both ``chunk`` and ``d_block``."""
+    c, db, n = int(chunk), int(d_block), int(n)
+    tiles = (3 * c * db + 2 * c * n + db * n) * int(dtype_bytes)
+    scratch = db * n * 4
+    work = (c * db + c * n) * 4
+    return tiles + scratch + work
+
+
 def selective_scan(dt, u, b_t, c_t, a, *, chunk: Optional[int] = None,
                    d_block: Optional[int] = None, interpret: bool = False):
     if chunk is None or d_block is None:

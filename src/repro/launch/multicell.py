@@ -46,6 +46,7 @@ def tune_cells(
     isolation: str = "inline",
     jobs: int = 1,
     trial_timeout: float = None,
+    prefilter: str = "off",
     evaluator_factory=None,
     transfer: str = "off",
     **algo_kwargs,
@@ -70,7 +71,7 @@ def tune_cells(
         study = Study(
             engine=EngineConfig(
                 workers=jobs, isolation=isolation, timeout_s=trial_timeout,
-                patience=patience, batch_size=batch_size,
+                patience=patience, batch_size=batch_size, prefilter=prefilter,
             ),
             cache_path=cache_path,
         )
@@ -83,6 +84,7 @@ def tune_cells(
                 ("patience", patience is not None),
                 ("batch_size", batch_size is not None),
                 ("cache_path", cache_path is not None),
+                ("prefilter", prefilter != "off"),
             ) if off_default
         ]
         if ignored:
@@ -235,6 +237,7 @@ def main(argv=None):
             isolation=engine.isolation,
             jobs=engine.workers,
             trial_timeout=engine.timeout_s,
+            prefilter=engine.prefilter,
         )
     evaluator_factory = None
     if args.evaluator_factory:

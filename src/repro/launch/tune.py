@@ -76,6 +76,11 @@ def add_engine_args(ap: argparse.ArgumentParser):
                          "slots (env set before the worker's first jax "
                          "import), so N workers run N truly concurrent "
                          "device trials; requires --isolation subprocess")
+    ap.add_argument("--prefilter", default=None, choices=["off", "static"],
+                    help="static feasibility gate at propose time: 'static' "
+                         "rejects provably-doomed configs (clamp aliases, "
+                         "VMEM/HBM overflow) as infeasible_static records "
+                         "without spawning a worker (default off)")
 
 
 def roofline_platform_key(platform: str, arch: str, shape: str,
@@ -97,6 +102,7 @@ def engine_overrides(args) -> dict:
         "patience": "patience",
         "batch": "batch_size",
         "pin_devices": "pin_devices",
+        "prefilter": "prefilter",
     }
     return {
         field: getattr(args, flag)

@@ -1,0 +1,353 @@
+"""The static feasibility gate (repro.core.feasibility): per-space rejection
+rules, the TrialScheduler prefilter seam (rejections recorded / persisted /
+replayed, never charged a worker or counted as an evaluation), Study-level
+accounting, and property tests over the kernel footprint models."""
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.core import EngineConfig, Study
+from repro.core.evaluators import FunctionEvaluator
+from repro.core.feasibility import (
+    PREFILTER_MODES,
+    Rejection,
+    StaticPrefilter,
+    VMEM_BUDGET,
+    make_prefilter,
+)
+from repro.core.scheduler import TrialScheduler
+
+from _hyp import HAVE_HYPOTHESIS, given, settings, st
+
+FLASH_PLAT = "kernel/flash_attention.f32:b2s256h4k2d64"
+RWKV_PLAT = "kernel/rwkv6.f32:b1s48h2d32"
+SSM_PLAT = "kernel/ssm_scan.f32:b1s128di64n8"
+
+
+def flash_time(config):
+    return 1.0 + config["block_q"] / 1e5 + config["block_kv"] / 1e5, {}
+
+
+# ------------------------------------------------------------ make_prefilter
+
+
+def test_make_prefilter_modes():
+    assert make_prefilter("off") is None
+    assert make_prefilter(None) is None
+    assert isinstance(make_prefilter("static"), StaticPrefilter)
+    with pytest.raises(ValueError):
+        make_prefilter("bogus")
+    assert set(PREFILTER_MODES) == {"off", "static"}
+
+
+def test_engine_config_validates_prefilter():
+    assert EngineConfig(prefilter="static").prefilter == "static"
+    with pytest.raises(ValueError):
+        EngineConfig(prefilter="bogus")
+
+
+# ------------------------------------------------------------- kernel rules
+
+
+def test_flash_snap_alias_rejected():
+    pf = StaticPrefilter()
+    r = pf({"block_q": 1024, "block_kv": 128}, FLASH_PLAT)
+    assert isinstance(r, Rejection)
+    assert r.rule == "snap_alias"
+    assert r.detail["param"] == "block_q"
+    assert r.detail["proposed"] == 1024
+    assert r.detail["effective"] == 256  # snapped to the padded seq
+
+
+def test_flash_legal_config_passes():
+    pf = StaticPrefilter()
+    assert pf({"block_q": 128, "block_kv": 256}, FLASH_PLAT) is None
+
+
+def test_rwkv6_chunk_alias_rejected():
+    pf = StaticPrefilter()
+    r = pf({"chunk": 64}, RWKV_PLAT)  # T=48 < 64 -> clamps
+    assert r is not None and r.rule == "snap_alias"
+    assert pf({"chunk": 32}, RWKV_PLAT) is None
+
+
+def test_ssm_d_block_alias_rejected():
+    pf = StaticPrefilter()
+    r = pf({"chunk": 64, "d_block": 1024}, SSM_PLAT)  # di=64 -> halves to 64
+    assert r is not None and r.rule == "snap_alias"
+    assert r.detail["param"] == "d_block"
+    r2 = pf({"chunk": 256, "d_block": 64}, SSM_PLAT)  # s=128 -> chunk clamps
+    assert r2 is not None and r2.detail["param"] == "chunk"
+    assert pf({"chunk": 64, "d_block": 64}, SSM_PLAT) is None
+
+
+def test_vmem_budget_rejection():
+    # a tiny budget makes even the minimal legal config overflow
+    pf = StaticPrefilter(vmem_budget=1024)
+    r = pf({"block_q": 128, "block_kv": 128}, FLASH_PLAT)
+    assert r is not None and r.rule == "vmem_budget"
+    assert r.detail["vmem_est_bytes"] > r.detail["vmem_budget_bytes"] == 1024
+
+
+def test_unknown_platform_passes_clean():
+    pf = StaticPrefilter()
+    assert pf({"anything": 1}, "mystery/unknown:cell") is None
+    assert pf({"block_q": 10 ** 9}, "kernel/not-a-kernel") is None
+
+
+# ---------------------------------------------------------- wordcount rules
+
+
+def test_wordcount_sort_buffer_clamp_alias():
+    pf = StaticPrefilter()
+    r = pf({"block_tokens": 4096, "sort_buffer_tokens": 65536}, "wordcount")
+    assert r is not None and r.rule == "snap_alias"
+    assert r.detail == {
+        "param": "sort_buffer_tokens", "proposed": 65536, "effective": 4096,
+    }
+    assert pf({"block_tokens": 65536, "sort_buffer_tokens": 4096},
+              "wordcount") is None
+
+
+# ----------------------------------------------------------- roofline rules
+
+
+def test_mesh_divisibility_rejection():
+    pf = StaticPrefilter()
+    r = pf({"mesh_model_parallel": 3}, "train/llama3.2-1b:train_4k")
+    assert r is not None and r.rule == "mesh_divisibility"
+    assert r.detail == {"mesh_model_parallel": 3, "chips": 256}
+    assert pf({"mesh_model_parallel": 8}, "train/llama3.2-1b:train_4k") is None
+
+
+def test_hbm_budget_rejection_on_tiny_topology():
+    pf = StaticPrefilter()
+    # a 72B model with no model parallelism on 4 chips cannot fit 16 GiB
+    r = pf({"mesh_model_parallel": 1}, "train/qwen2-72b:train_4k@4c")
+    assert r is not None and r.rule == "hbm_budget"
+    assert r.detail["hbm_est_gib"] > r.detail["hbm_budget_gib"]
+
+
+def test_roofline_unknown_cell_passes():
+    pf = StaticPrefilter()
+    assert pf({"mesh_model_parallel": 3}, "train/not-an-arch:train_4k") is None
+
+
+# -------------------------------------------------- scheduler prefilter seam
+
+
+def test_scheduler_rejects_without_calling_evaluator(tmp_path):
+    calls = []
+
+    def ev(config):
+        calls.append(dict(config))
+        return flash_time(config)
+
+    s = TrialScheduler(ev, platform=FLASH_PLAT,
+                       cache_path=tmp_path / "c.jsonl", prefilter="static")
+    trials = s.evaluate_batch([
+        {"block_q": 128, "block_kv": 128},
+        {"block_q": 1024, "block_kv": 128},  # snap alias -> rejected
+    ])
+    ok = [t for t in trials if t.ok]
+    rejected = [t for t in trials if t.status == "infeasible_static"]
+    assert len(ok) == 1 and len(rejected) == 1
+    # the doomed config never reached the evaluator
+    assert calls == [{"block_q": 128, "block_kv": 128}]
+    r = rejected[0]
+    assert r.source == "prefilter"
+    assert r.info["prefilter_rule"] == "snap_alias"
+    assert "InfeasibleStatic[snap_alias]" in r.error
+    assert r.wall_s == 0.0
+    assert r.score == float("inf")  # strategies see an infeasible penalty
+
+
+def test_scheduler_accounting_excludes_rejections(tmp_path):
+    s = TrialScheduler(lambda c: flash_time(c), platform=FLASH_PLAT,
+                       prefilter="static")
+    s.evaluate_batch([
+        {"block_q": 128, "block_kv": 128},
+        {"block_q": 1024, "block_kv": 128},
+        {"block_q": 1024, "block_kv": 1024},
+    ])
+    stats = s.stats_snapshot()
+    assert stats["infeasible_static"] == 2
+    assert stats["evaluations"] == 1  # rejections never count as evaluations
+    assert stats["fresh"] == 1
+    assert stats["timeouts"] == 0 and stats["errors"] == 0
+
+
+def test_rejection_replays_from_cache_on_resume(tmp_path):
+    cache = tmp_path / "c.jsonl"
+    s1 = TrialScheduler(lambda c: flash_time(c), platform=FLASH_PLAT,
+                        cache_path=cache, prefilter="static")
+    s1.evaluate_batch([{"block_q": 1024, "block_kv": 128}])
+
+    s2 = TrialScheduler(lambda c: flash_time(c), platform=FLASH_PLAT,
+                        cache_path=cache, prefilter="static")
+    [t] = s2.evaluate_batch([{"block_q": 1024, "block_kv": 128}])
+    assert t.status == "infeasible_static"
+    assert t.source == "cache"
+    stats = s2.stats_snapshot()
+    assert stats["fresh"] == 0
+    assert stats["cache_hits"] == 1
+    assert stats["infeasible_static"] == 1
+    assert stats["evaluations"] == 0
+
+
+def test_gate_off_run_measures_stored_rejections_for_real(tmp_path):
+    """A --prefilter off session must never inherit another session's static
+    rejection from a shared cache — it measures the config for real."""
+    cache = tmp_path / "c.jsonl"
+    s1 = TrialScheduler(lambda c: flash_time(c), platform=FLASH_PLAT,
+                        cache_path=cache, prefilter="static")
+    s1.evaluate_batch([{"block_q": 1024, "block_kv": 128}])
+
+    s2 = TrialScheduler(lambda c: flash_time(c), platform=FLASH_PLAT,
+                        cache_path=cache)  # no prefilter
+    [t] = s2.evaluate_batch([{"block_q": 1024, "block_kv": 128}])
+    assert t.ok and t.source == "fresh"
+    assert s2.stats_snapshot()["infeasible_static"] == 0
+
+
+def test_submit_path_rejects_too(tmp_path):
+    s = TrialScheduler(lambda c: flash_time(c), platform=FLASH_PLAT,
+                       prefilter="static")
+    ticket = s.submit({"block_q": 1024, "block_kv": 128})
+    done = s.poll()
+    assert [(t, trial.status) for t, trial in done] == \
+        [(ticket, "infeasible_static")]
+    assert s.stats_snapshot()["evaluations"] == 0
+
+
+# -------------------------------------------------------- study accounting
+
+
+def test_study_outcome_reports_infeasible_static(tmp_path):
+    study = Study(engine=EngineConfig(prefilter="static"),
+                  cache_path=tmp_path / "cache.jsonl")
+    from repro.apps.wordcount import WORDCOUNT_SPACE
+
+    def wc_time(config):
+        return 1.0 + config["block_tokens"] / 1e6, {}
+
+    with study:
+        outcome = study.optimize(
+            "wordcount", "random", wc_time,
+            space=WORDCOUNT_SPACE, budget=24, seed=3,
+        )
+    s = outcome.summary()
+    # the random walk over the space proposes at least one clamp alias
+    assert outcome.infeasible_static >= 1
+    assert s["infeasible_static"] == outcome.infeasible_static
+    # evaluations never include rejected proposals: the counter tracks only
+    # configs that were actually measured (or replayed)
+    assert s["evaluations"] <= 24
+    assert s["evaluations"] == outcome.cache_stats["fresh"] + \
+        outcome.cache_stats["memo_hits"] + outcome.cache_stats["cache_hits"]
+
+
+def test_outcome_summary_omits_zero_counter(tmp_path):
+    study = Study(engine=EngineConfig(),  # prefilter off
+                  cache_path=tmp_path / "cache.jsonl")
+    with study:
+        outcome = study.optimize(
+            "wordcount", "random",
+            lambda c: (1.0 + c["block_tokens"] / 1e6, {}),
+            space=__import__("repro.apps.wordcount",
+                             fromlist=["WORDCOUNT_SPACE"]).WORDCOUNT_SPACE,
+            budget=6, seed=3,
+        )
+    assert outcome.infeasible_static == 0
+    assert "infeasible_static" not in outcome.summary()
+
+
+# ---------------------------------------------------------- property tests
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    bq=st.sampled_from([128, 256, 512, 1024]),
+    bkv=st.sampled_from([128, 256, 512, 1024]),
+    dh=st.sampled_from([32, 64, 128]),
+)
+def test_flash_footprint_monotone_in_blocks(bq, bkv, dh):
+    from repro.kernels.flash_attention.ops import vmem_footprint
+
+    base = vmem_footprint(bq, bkv, dh)
+    assert base > 0
+    assert vmem_footprint(bq * 2, bkv, dh) > base
+    assert vmem_footprint(bq, bkv * 2, dh) > base
+    assert vmem_footprint(bq, bkv, dh * 2) > base
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    chunk=st.sampled_from([16, 32, 64, 128]),
+    hd=st.sampled_from([32, 64]),
+)
+def test_rwkv6_footprint_monotone(chunk, hd):
+    from repro.kernels.rwkv6.ops import vmem_footprint
+
+    assert vmem_footprint(chunk * 2, hd) > vmem_footprint(chunk, hd) > 0
+    assert vmem_footprint(chunk, hd * 2) > vmem_footprint(chunk, hd)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    chunk=st.sampled_from([16, 64, 256]),
+    d_block=st.sampled_from([16, 64, 256, 1024]),
+    n=st.sampled_from([8, 16]),
+)
+def test_ssm_footprint_monotone(chunk, d_block, n):
+    from repro.kernels.ssm_scan.ops import vmem_footprint
+
+    base = vmem_footprint(chunk, d_block, n)
+    assert base > 0
+    assert vmem_footprint(chunk * 2, d_block, n) > base
+    assert vmem_footprint(chunk, d_block * 2, n) > base
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    bq=st.sampled_from([128, 256]),
+    bkv=st.sampled_from([128, 256]),
+)
+def test_snap_idempotent_flash_configs_accepted(bq, bkv):
+    """Any config the snap helpers leave unchanged (for the cell's shape)
+    must pass the gate with a finite footprint under the real budget."""
+    from repro.kernels.flash_attention.ops import snap_block, vmem_footprint
+
+    s = 256  # FLASH_PLAT's sequence length
+    assert snap_block(bq, s) == bq and snap_block(bkv, s) == bkv
+    assert 0 < vmem_footprint(bq, bkv, 64) <= VMEM_BUDGET
+    assert StaticPrefilter()({"block_q": bq, "block_kv": bkv},
+                             FLASH_PLAT) is None
+
+
+def test_shipped_tuned_table_effective_configs_pass_gate():
+    """Soundness against shipped results: the gate may brand a raw table
+    entry a snap-alias (the table stores pre-snap incumbents), but the
+    *effective* (snapped) config it aliases must always pass — the gate
+    never rejects a config that actually ran and won its cell."""
+    from repro.kernels import DEFAULT_TABLE_PATH
+
+    table = json.loads(Path(DEFAULT_TABLE_PATH).read_text())
+    pf = StaticPrefilter()
+    assert table["entries"], "shipped tuned table is empty"
+    for key, entry in table["entries"].items():
+        kernel, dtype, shape_class = key.split("|")
+        platform = f"kernel/{kernel}.{dtype}:{shape_class}"
+        config = dict(entry["config"])
+        for _ in range(8):  # follow alias chains to the effective config
+            r = pf(config, platform)
+            if r is None:
+                break
+            assert r.rule == "snap_alias", (
+                f"{key}: shipped incumbent rejected by {r.rule}: {r.reason}"
+            )
+            config[r.detail["param"]] = r.detail["effective"]
+        else:
+            pytest.fail(f"{key}: alias chain did not converge")
+        assert pf(config, platform) is None

@@ -1,0 +1,163 @@
+"""Edge cases for the HLO text analyzers (repro.core.hlo): empty modules,
+malformed shape strings, CollectiveStats.combine weighting, and the
+parse_memory peak-buffer estimator the static feasibility gate's AOT path
+feeds on."""
+import numpy as np
+import pytest
+
+from repro.core.hlo import (
+    CollectiveStats,
+    MemoryEstimate,
+    parse_collectives,
+    parse_memory,
+)
+
+
+# ---------------------------------------------------------------- empty text
+
+
+def test_parse_collectives_empty_text():
+    stats = parse_collectives("")
+    assert stats.count == 0
+    assert stats.wire_bytes == 0.0
+    assert dict(stats.by_op) == {}
+
+
+def test_parse_memory_empty_text():
+    est = parse_memory("")
+    assert est == MemoryEstimate()
+    assert est.peak_bytes == 0
+    assert est.op_count == 0
+
+
+def test_parse_memory_non_hlo_garbage():
+    # prose / MLIR-ish text with no `%name = shape op(` lines parses to zero
+    est = parse_memory("func.func @main(%arg0: tensor<4xf32>) {\n  return\n}")
+    assert est.peak_bytes == 0
+
+
+# ----------------------------------------------------------- malformed shapes
+
+
+def test_malformed_shape_contributes_zero_bytes():
+    # dtype not in DTYPE_BYTES (token types) and missing dims both yield 0
+    text = "\n".join([
+        "ENTRY main {",
+        "  a.1 = token[] after-all()",
+        "  b.2 = f32[bogus] weird-op(a.1)",          # non-numeric dims: no match
+        "  c.3 = f32[4,4]{1,0} add(a.1, a.1)",       # well-formed: 64 B temp
+        "}",
+    ])
+    est = parse_memory(text)
+    assert est.max_temp_bytes == 64
+    # the token[] line parses as an op with zero bytes
+    assert est.total_temp_bytes == 64
+
+
+def test_parse_collectives_ignores_malformed_groups():
+    # a collective with no replica_groups defaults to group size 1 (zero wire)
+    text = "  ar.1 = f32[8]{0} all-reduce(p.0), to_apply=add\n"
+    stats = parse_collectives(text)
+    assert stats.count == 1
+    assert stats.wire_bytes == 0.0  # 2*(g-1)/g with g=1
+
+
+# ------------------------------------------------------ combine() weighting
+
+
+def _stats(op: str, g: int, result_bytes: int) -> CollectiveStats:
+    s = CollectiveStats()
+    s.add(op, g, result_bytes)
+    return s
+
+
+def test_combine_weights_wire_bytes_but_not_counts():
+    a = _stats("all-gather", 4, 1024)   # wire = 3/4 * 1024 = 768
+    b = _stats("all-gather", 4, 2048)   # wire = 3/4 * 2048 = 1536
+    out = CollectiveStats.combine(a, b, wa=2.0, wb=0.5)
+    assert out.wire_bytes == pytest.approx(2.0 * 768 + 0.5 * 1536)
+    assert out.by_op["all-gather"] == pytest.approx(out.wire_bytes)
+    assert out.by_group_size[4] == pytest.approx(out.wire_bytes)
+    # counts are occurrence counts — never scaled by the weights
+    assert out.count == 2
+    assert out.counts_by_op["all-gather"] == 2
+
+
+def test_combine_negative_weight_is_subtraction():
+    a = _stats("all-reduce", 2, 1000)   # wire = 2*(1/2)*1000 = 1000
+    out = CollectiveStats.combine(a, a, wa=1.0, wb=-1.0)
+    assert out.wire_bytes == pytest.approx(0.0)
+    assert out.count == 2  # still two observations
+
+
+def test_combine_empty_is_identity_on_wire_bytes():
+    a = _stats("reduce-scatter", 4, 100)  # wire = 3 * 100
+    out = CollectiveStats.combine(a, CollectiveStats())
+    assert out.wire_bytes == pytest.approx(a.wire_bytes)
+    assert out.count == a.count
+
+
+# -------------------------------------------------------------- parse_memory
+
+
+SYNTHETIC_HLO = """\
+HloModule test, entry_computation_layout={(f32[64,64]{1,0})->f32[64]{0}}
+
+ENTRY main.5 {
+  Arg_0.1 = f32[64,64]{1,0} parameter(0)
+  exp.2 = f32[64,64]{1,0} exponential(Arg_0.1)
+  c.3 = f32[] constant(0)
+  ROOT reduce.4 = f32[64]{0} reduce(exp.2, c.3), dimensions={1}
+}
+"""
+
+
+def test_parse_memory_synthetic_module():
+    est = parse_memory(SYNTHETIC_HLO)
+    assert est.param_bytes == 64 * 64 * 4
+    assert est.output_bytes == 64 * 4
+    assert est.max_temp_bytes == 64 * 64 * 4  # the exponential intermediate
+    assert est.peak_bytes == est.param_bytes + est.output_bytes + est.max_temp_bytes
+    assert est.op_count == 4
+
+
+def test_parse_memory_max_vs_total_temp():
+    text = "\n".join([
+        "ENTRY m {",
+        "  p.1 = f32[8]{0} parameter(0)",
+        "  a.2 = f32[1024]{0} broadcast(p.1)",
+        "  b.3 = f32[16]{0} slice(a.2)",
+        "  ROOT r.4 = f32[16]{0} negate(b.3)",
+        "}",
+    ])
+    est = parse_memory(text)
+    assert est.max_temp_bytes == 1024 * 4
+    assert est.total_temp_bytes == 1024 * 4 + 16 * 4
+
+
+def test_parse_memory_on_real_lowering():
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+
+    from repro.core.feasibility import aot_memory_estimate
+
+    x = np.zeros((32, 32), np.float32)
+    est = aot_memory_estimate(lambda a, b: jnp.dot(a, b).sum(), x, x)
+    assert est.param_bytes >= 2 * 32 * 32 * 4
+    assert est.max_temp_bytes >= 32 * 32 * 4  # the dot product intermediate
+    assert est.peak_bytes > 0
+    assert est.op_count > 0
+
+
+def test_parse_memory_monotone_in_input_size():
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+
+    from repro.core.feasibility import aot_memory_estimate
+
+    def f(a):
+        return jnp.tanh(a) @ jnp.tanh(a).T
+
+    small = aot_memory_estimate(f, np.zeros((16, 16), np.float32))
+    big = aot_memory_estimate(f, np.zeros((128, 128), np.float32))
+    assert big.peak_bytes > small.peak_bytes

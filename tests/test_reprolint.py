@@ -1,0 +1,199 @@
+"""The repo-invariant linter (tools/reprolint.py): each rule fires on a
+minimal violating sample, the escape hatch suppresses, and the shipped
+src/ tree is clean."""
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "tools"))
+
+import reprolint  # noqa: E402
+
+
+def run_lint(tmp_path, source, subdir=""):
+    d = tmp_path / "pkg" / subdir if subdir else tmp_path / "pkg"
+    d.mkdir(parents=True, exist_ok=True)
+    f = d / "sample.py"
+    f.write_text(source)
+    return reprolint.lint_file(f)
+
+
+def rules(findings):
+    return [rule for _path, _line, rule, _msg in findings]
+
+
+# ------------------------------------------------------- strategy purity
+
+
+def test_wallclock_in_strategies_flagged(tmp_path):
+    src = "import time\n\ndef propose():\n    return time.time()\n"
+    findings = run_lint(tmp_path, src, subdir="strategies")
+    assert rules(findings) == ["strategy-wallclock"]
+
+
+def test_perf_counter_and_datetime_flagged(tmp_path):
+    src = (
+        "import time\nfrom datetime import datetime\n\n"
+        "def f():\n"
+        "    a = time.perf_counter()\n"
+        "    b = datetime.now()\n"
+        "    return a, b\n"
+    )
+    findings = run_lint(tmp_path, src, subdir="strategies")
+    assert rules(findings).count("strategy-wallclock") >= 1
+
+
+def test_wallclock_outside_strategies_allowed(tmp_path):
+    # evaluators legitimately measure wall time — the rule is scoped
+    src = "import time\n\ndef measure():\n    return time.perf_counter()\n"
+    assert run_lint(tmp_path, src) == []
+
+
+def test_unseeded_random_flagged_seeded_allowed(tmp_path):
+    bad = "import random\n\ndef f():\n    return random.random()\n"
+    findings = run_lint(tmp_path, bad, subdir="strategies")
+    assert rules(findings) == ["strategy-unseeded-random"]
+
+    good = (
+        "import random\n\n"
+        "def f(seed):\n"
+        "    rng = random.Random(seed)\n"
+        "    return rng.random()\n"
+    )
+    assert run_lint(tmp_path, good, subdir="strategies") == []
+
+
+def test_np_random_flagged(tmp_path):
+    src = "import numpy as np\n\ndef f():\n    return np.random.rand(3)\n"
+    findings = run_lint(tmp_path, src, subdir="strategies")
+    assert rules(findings) == ["strategy-unseeded-random"]
+
+
+# -------------------------------------------------- evaluator declarations
+
+
+def test_evaluator_without_parallel_safe_flagged(tmp_path):
+    src = (
+        "class ShinyEvaluator:\n"
+        "    def __call__(self, config):\n"
+        "        return 1.0, {}\n"
+    )
+    findings = run_lint(tmp_path, src)
+    assert rules(findings) == ["evaluator-parallel-safe"]
+
+
+def test_evaluator_declarations_satisfy_rule(tmp_path):
+    class_attr = (
+        "class AEvaluator:\n"
+        "    parallel_safe = False\n"
+        "    def __call__(self, config):\n"
+        "        return 1.0, {}\n"
+    )
+    dataclass_field = (
+        "from dataclasses import dataclass\n\n"
+        "@dataclass\n"
+        "class BEvaluator:\n"
+        "    parallel_safe: bool = True\n"
+        "    def __call__(self, config):\n"
+        "        return 1.0, {}\n"
+    )
+    init_assign = (
+        "class CEvaluator:\n"
+        "    def __init__(self):\n"
+        "        self.parallel_safe = True\n"
+        "    def __call__(self, config):\n"
+        "        return 1.0, {}\n"
+    )
+    for src in (class_attr, dataclass_field, init_assign):
+        assert run_lint(tmp_path, src) == []
+
+
+def test_evaluator_protocol_itself_exempt(tmp_path):
+    src = (
+        "class Evaluator:\n"
+        "    def __call__(self, config):\n"
+        "        ...\n"
+    )
+    assert run_lint(tmp_path, src) == []
+
+
+# ------------------------------------------------------- fidelity contract
+
+
+def test_supports_fidelity_with_bare_kwargs_flagged(tmp_path):
+    src = (
+        "class DEvaluator:\n"
+        "    parallel_safe = True\n"
+        "    supports_fidelity = True\n"
+        "    def __call__(self, config, **kwargs):\n"
+        "        return 1.0, {}\n"
+    )
+    findings = run_lint(tmp_path, src)
+    assert rules(findings) == ["fidelity-explicit-param"]
+
+
+def test_supports_fidelity_with_explicit_param_ok(tmp_path):
+    src = (
+        "class EEvaluator:\n"
+        "    parallel_safe = True\n"
+        "    supports_fidelity = True\n"
+        "    def __call__(self, config, fidelity=1.0):\n"
+        "        return 1.0, {}\n"
+    )
+    assert run_lint(tmp_path, src) == []
+
+
+def test_supports_fidelity_false_not_checked(tmp_path):
+    src = (
+        "class FEvaluator:\n"
+        "    parallel_safe = True\n"
+        "    supports_fidelity = False\n"
+        "    def __call__(self, config, **kwargs):\n"
+        "        return 1.0, {}\n"
+    )
+    assert run_lint(tmp_path, src) == []
+
+
+# ----------------------------------------------------------- escape hatch
+
+
+def test_escape_hatch_suppresses(tmp_path):
+    src = (
+        "import time\n\n"
+        "def f():\n"
+        "    return time.time()  # reprolint: ok\n"
+    )
+    assert run_lint(tmp_path, src, subdir="strategies") == []
+
+
+def test_syntax_error_reported_not_crashed(tmp_path):
+    findings = run_lint(tmp_path, "def broken(:\n")
+    assert rules(findings) == ["parse-error"]
+
+
+# ------------------------------------------------------------- repo clean
+
+
+def test_shipped_src_tree_is_clean():
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "reprolint.py"),
+         str(REPO / "src")],
+        capture_output=True, text=True,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_cli_exits_nonzero_on_findings(tmp_path):
+    bad = tmp_path / "strategies"
+    bad.mkdir()
+    (bad / "x.py").write_text(
+        "import random\n\ndef f():\n    return random.random()\n")
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "reprolint.py"), str(tmp_path)],
+        capture_output=True, text=True,
+    )
+    assert proc.returncode == 1
+    assert "strategy-unseeded-random" in proc.stdout

@@ -1,0 +1,247 @@
+#!/usr/bin/env python
+"""reprolint — AST lint for this repo's reproducibility invariants.
+
+The tuner's correctness rests on a few non-local contracts that nothing in
+the type system enforces, and that have each been broken (or nearly broken)
+once already:
+
+  ``strategy-wallclock``
+      Strategy code (``src/repro/core/strategies/``) must be a pure function
+      of its observation history — no wall-clock reads (``time.time``,
+      ``time.perf_counter``, ``time.monotonic``, ``datetime.now``, ...).
+      A strategy that keys decisions off the clock makes warm cache replays
+      diverge from the original run, silently breaking resume determinism.
+
+  ``strategy-unseeded-random``
+      Same files: no unseeded randomness. Module-level ``random.*`` /
+      ``numpy.random.*`` draws ignore the ``seed=`` every strategy accepts;
+      only an explicit ``random.Random(seed)`` / ``np.random.default_rng``
+      instance is allowed.
+
+  ``evaluator-parallel-safe``
+      Every ``*Evaluator`` class must *declare* ``parallel_safe`` (class
+      attribute or dataclass field). The TrialScheduler fans batches over a
+      thread pool only when the evaluator says that is sound; an undeclared
+      attribute falls back to a scheduler default picked far from the code
+      that knows the answer.
+
+  ``fidelity-explicit-param``
+      A class declaring ``supports_fidelity = True`` must take an explicit
+      ``fidelity`` parameter in ``__call__`` — a bare ``**kwargs`` would
+      swallow the kwarg, run the full-size job, and get cached under a
+      low-fidelity key as if it were the scaled one.
+
+Suppress a finding by appending ``# reprolint: ok`` to the flagged line.
+
+Usage::
+
+    python tools/reprolint.py [PATHS...]     # default: src/
+
+Exit status 1 when findings remain, with one ``path:line: [rule] message``
+per finding.
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+from typing import Iterator, List, Optional, Tuple
+
+ESCAPE_HATCH = "# reprolint: ok"
+
+# wall-clock attribute reads banned in strategy code: (module, attr)
+WALLCLOCK_CALLS = {
+    ("time", "time"),
+    ("time", "perf_counter"),
+    ("time", "monotonic"),
+    ("time", "process_time"),
+    ("time", "time_ns"),
+    ("time", "perf_counter_ns"),
+    ("time", "monotonic_ns"),
+    ("datetime", "now"),
+    ("datetime", "utcnow"),
+    ("datetime", "today"),
+}
+
+# unseeded module-level RNG draws banned in strategy code (the seeded
+# random.Random(seed) / np.random.default_rng(seed) instances are fine —
+# they are constructor calls, not draws)
+UNSEEDED_RANDOM = {
+    "random", "randint", "randrange", "uniform", "choice", "choices",
+    "shuffle", "sample", "gauss", "normalvariate", "betavariate", "seed",
+    "random_sample", "rand", "randn", "standard_normal", "permutation",
+}
+RANDOM_MODULES = {"random", "np.random", "numpy.random"}
+
+
+class Finding(Tuple[str, int, str, str]):
+    """(path, line, rule, message)"""
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """Best-effort dotted name for an attribute chain (``np.random.rand``)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _suppressed(source_lines: List[str], lineno: int) -> bool:
+    if 1 <= lineno <= len(source_lines):
+        return ESCAPE_HATCH in source_lines[lineno - 1]
+    return False
+
+
+def _iter_calls(tree: ast.AST) -> Iterator[ast.Call]:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            yield node
+
+
+def lint_strategy_purity(path: Path, tree: ast.AST,
+                         lines: List[str]) -> Iterator[Tuple[int, str, str]]:
+    """strategy-wallclock + strategy-unseeded-random over one strategy file."""
+    for call in _iter_calls(tree):
+        name = _dotted(call.func)
+        if name is None:
+            continue
+        parts = name.split(".")
+        head, tail = ".".join(parts[:-1]), parts[-1]
+        if (parts[0], tail) in WALLCLOCK_CALLS or (
+            tail in ("now", "utcnow", "today") and "datetime" in parts
+        ):
+            yield (call.lineno, "strategy-wallclock",
+                   f"wall-clock read `{name}()` in strategy code — "
+                   "strategies must be pure functions of their history")
+        elif head in RANDOM_MODULES and tail in UNSEEDED_RANDOM:
+            yield (call.lineno, "strategy-unseeded-random",
+                   f"unseeded RNG draw `{name}()` — use the "
+                   "`random.Random(seed)` instance every strategy carries")
+
+
+def _class_declares(cls: ast.ClassDef, attr: str) -> bool:
+    """Whether ``attr`` appears as a class attribute, an annotated dataclass
+    field, or an assignment inside ``__init__``/``__post_init__``."""
+    for stmt in cls.body:
+        if isinstance(stmt, ast.Assign):
+            for t in stmt.targets:
+                if isinstance(t, ast.Name) and t.id == attr:
+                    return True
+        elif isinstance(stmt, ast.AnnAssign):
+            if isinstance(stmt.target, ast.Name) and stmt.target.id == attr:
+                return True
+        elif isinstance(stmt, ast.FunctionDef) and stmt.name in (
+            "__init__", "__post_init__",
+        ):
+            for sub in ast.walk(stmt):
+                if isinstance(sub, ast.Assign):
+                    for t in sub.targets:
+                        if (isinstance(t, ast.Attribute)
+                                and isinstance(t.value, ast.Name)
+                                and t.value.id == "self"
+                                and t.attr == attr):
+                            return True
+    return False
+
+
+def _truthy_class_attr(cls: ast.ClassDef, attr: str) -> bool:
+    for stmt in cls.body:
+        targets: List[ast.AST] = []
+        value: Optional[ast.AST] = None
+        if isinstance(stmt, ast.Assign):
+            targets, value = stmt.targets, stmt.value
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            targets, value = [stmt.target], stmt.value
+        for t in targets:
+            if isinstance(t, ast.Name) and t.id == attr:
+                if isinstance(value, ast.Constant):
+                    return bool(value.value)
+                return True  # non-literal: assume meaningful
+    return False
+
+
+def _find_call(cls: ast.ClassDef) -> Optional[ast.FunctionDef]:
+    for stmt in cls.body:
+        if isinstance(stmt, ast.FunctionDef) and stmt.name == "__call__":
+            return stmt
+    return None
+
+
+def _has_explicit_fidelity(fn: ast.FunctionDef) -> bool:
+    named = fn.args.args + fn.args.kwonlyargs
+    return any(a.arg == "fidelity" for a in named)
+
+
+def lint_evaluator_contracts(path: Path, tree: ast.AST,
+                             lines: List[str]) -> Iterator[Tuple[int, str, str]]:
+    """evaluator-parallel-safe + fidelity-explicit-param over one file."""
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        is_evaluator = node.name.endswith("Evaluator") and node.name != "Evaluator"
+        # the Evaluator Protocol itself and *Spec helpers are exempt
+        if is_evaluator:
+            if not _class_declares(node, "parallel_safe"):
+                yield (node.lineno, "evaluator-parallel-safe",
+                       f"{node.name} does not declare `parallel_safe` — "
+                       "the scheduler must not guess whether batches of "
+                       "this evaluator may share a thread pool")
+        if _truthy_class_attr(node, "supports_fidelity"):
+            call = _find_call(node)
+            if call is not None and not _has_explicit_fidelity(call):
+                yield (call.lineno, "fidelity-explicit-param",
+                       f"{node.name} declares supports_fidelity=True but "
+                       "__call__ has no explicit `fidelity` parameter — "
+                       "a bare **kwargs would silently swallow the rung "
+                       "fraction")
+
+
+def lint_file(path: Path) -> List[Tuple[Path, int, str, str]]:
+    try:
+        source = path.read_text()
+        tree = ast.parse(source, filename=str(path))
+    except (OSError, SyntaxError) as e:
+        return [(path, getattr(e, "lineno", 0) or 0, "parse-error", str(e))]
+    lines = source.splitlines()
+    findings: List[Tuple[Path, int, str, str]] = []
+
+    checks = [lint_evaluator_contracts]
+    if "strategies" in path.parts:
+        checks.append(lint_strategy_purity)
+    for check in checks:
+        for lineno, rule, msg in check(path, tree, lines):
+            if not _suppressed(lines, lineno):
+                findings.append((path, lineno, rule, msg))
+    return findings
+
+
+def iter_targets(paths: List[str]) -> Iterator[Path]:
+    for raw in paths:
+        p = Path(raw)
+        if p.is_dir():
+            yield from sorted(p.rglob("*.py"))
+        elif p.suffix == ".py":
+            yield p
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    targets = argv or ["src"]
+    findings: List[Tuple[Path, int, str, str]] = []
+    checked = 0
+    for path in iter_targets(targets):
+        checked += 1
+        findings.extend(lint_file(path))
+    for path, lineno, rule, msg in findings:
+        print(f"{path}:{lineno}: [{rule}] {msg}")
+    print(f"reprolint: {checked} files checked, {len(findings)} finding(s)",
+          file=sys.stderr)
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

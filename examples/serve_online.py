@@ -1,0 +1,92 @@
+"""Online serving tuner on the scripted "drift" trace, end to end.
+
+The trace starts in a regime where the default serving config is optimal,
+then shifts to short prompts where a smaller ``attn_block_kv`` and an int8
+KV cache win. The controller keeps the incumbent config on the majority of
+decode windows throughout, probes one strategy-proposed candidate at a time
+inside the p99 safety envelope, and — after the shift — promotes a
+measurably better baseline. Every guard decision lands in the study journal,
+so the run is auditable afterwards like any offline session.
+
+    PYTHONPATH=src python examples/serve_online.py
+
+Equivalent CLI:  python -m repro.launch.serve --online-tune \
+    --study results/studies/serve_online --traffic drift --strategy tpe
+"""
+from pathlib import Path
+
+from repro.core import Study
+from repro.core.space import SERVE_SPACE
+from repro.core.strategies import make_strategy
+from repro.core.transfer import snap_into_space
+from repro.serving import (
+    DecodeWindowMonitor,
+    GuardConfig,
+    OnlineController,
+    OnlineJournal,
+    SyntheticServeModel,
+    scripted_trace,
+    surviving_baseline,
+)
+
+STUDY_DIR = Path("results/studies/serve_online")
+PLATFORM = "serve-online/drift"
+
+
+def main():
+    study = Study.open(STUDY_DIR)
+    guard = GuardConfig(safety_p99=1.25, slice_frac=0.2, probation_windows=3)
+
+    # a previous run's promoted baseline survives; first run starts at the
+    # space defaults
+    baseline = (surviving_baseline(study, PLATFORM)
+                or snap_into_space(SERVE_SPACE, {}))
+    strategy = make_strategy("tpe", SERVE_SPACE, max_trials=32,
+                             round_size=1, seed=0)
+    model = SyntheticServeModel(scripted_trace("drift"), seed=0)
+
+    with study:
+        journal = OnlineJournal(study, PLATFORM, algorithm="online-tpe",
+                                guard=guard, baseline=baseline)
+        controller = OnlineController(SERVE_SPACE, strategy, baseline,
+                                      guard=guard, journal=journal,
+                                      platform=PLATFORM)
+        monitor = DecodeWindowMonitor()  # clock-free: scripted latencies
+        for w in range(model.total_windows):
+            plan = controller.next_window()
+            phase = model.phase_at(w)
+            monitor.begin_window()
+            for latency in model.latencies(w, plan.config, plan.slice):
+                monitor.record(latency, tokens=phase.batch)
+            stats = monitor.end_window()
+            controller.observe(plan, stats)
+            if plan.slice == "candidate":
+                print(f"window {w:3d} [{phase.name:>13s}] candidate "
+                      f"#{plan.candidate_id}: p99 {stats.p99 * 1e3:.3f}ms "
+                      f"(baseline {controller.baseline_p99 * 1e3:.3f}ms)")
+        summary = controller.summary()
+        journal.finish(summary)
+
+    print(f"\nwindows: {summary['windows']} "
+          f"(baseline {summary['windows_baseline']}, "
+          f"candidate {summary['windows_candidate']}) | "
+          f"rollbacks {summary['rollbacks']}, "
+          f"promotions {summary['promotions']}, "
+          f"demotions {summary['demotions']}")
+    print(f"windowed p99: {summary['default_time_s'] * 1e3:.3f}ms -> "
+          f"{summary['best_time_s'] * 1e3:.3f}ms "
+          f"({summary['reduction_pct']}% reduction)")
+    best = summary["best_config"]
+    print(f"surviving baseline: attn_block_kv={best['attn_block_kv']}, "
+          f"kv_cache_dtype={best['kv_cache_dtype']}")
+
+    print("\nstudy sessions:")
+    for row in Study.load(STUDY_DIR).report()["sessions"]:
+        print(f"  session {row['session']}: mode={row.get('mode', 'offline')} "
+              f"algo={row['algorithm']} status={row['status']} "
+              f"promotions={row.get('promotions')} "
+              f"rollbacks={row.get('rollbacks')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -742,6 +742,88 @@ class Study:
         self._outcomes.append(outcome)
         return outcome
 
+    # ------------------------------------------------- external session seam
+
+    _LIFECYCLE_EVENTS = ("start", "done", "failed", "cell")
+
+    def begin_session(
+        self,
+        platform: str,
+        algorithm: str,
+        *,
+        space: Optional[str] = None,
+        mode: str = "offline",
+        args: Optional[Dict[str, Any]] = None,
+    ) -> int:
+        """Open a session whose trials are produced OUTSIDE the scheduler
+        engine (the online serving controller) yet journaled with the same
+        provenance: a ``start`` record in ``sessions.jsonl`` carrying
+        ``mode`` (``"online"`` sessions are skipped by :meth:`resume` — the
+        serving driver re-enters them with the surviving baseline instead of
+        replaying a strategy budget). Returns the session id; close it with
+        :meth:`end_session`."""
+        sid = self._next_session_id()
+        self._record({
+            "event": "start",
+            "session": sid,
+            "ts": time.time(),
+            "platform": platform,
+            "algorithm": algorithm,
+            "space": space,
+            "mode": mode,
+            "args": {
+                k: v for k, v in (args or {}).items()
+                if _jsonable(v) is not _MISSING
+            },
+            "engine": self.engine.to_dict(),
+            "log_path": str(self.log_path) if self.log_path else None,
+        })
+        return sid
+
+    def record_session_event(
+        self, session: int, event: str, fields: Optional[Dict[str, Any]] = None
+    ) -> None:
+        """Journal one event record against an open session (the online
+        controller's guard decisions ride through here). Lifecycle event
+        names are reserved for the study itself."""
+        if event in self._LIFECYCLE_EVENTS:
+            raise ValueError(
+                f"event {event!r} is a reserved lifecycle event — "
+                "begin_session/end_session own those"
+            )
+        self._record({
+            "event": event,
+            "session": int(session),
+            "ts": time.time(),
+            **{k: v for k, v in (fields or {}).items()
+               if _jsonable(v) is not _MISSING},
+        })
+
+    def end_session(self, session: int, summary: Dict[str, Any]) -> None:
+        """Close a :meth:`begin_session` session with its ``done`` summary
+        (same record shape the engine path writes — :meth:`report` rows pick
+        the shared keys up with no special casing)."""
+        self._record({
+            "event": "done",
+            "session": int(session),
+            "ts": time.time(),
+            "summary": {
+                k: v for k, v in (summary or {}).items()
+                if _jsonable(v) is not _MISSING
+            },
+        })
+
+    def append_trial_record(self, rec: Dict[str, Any]) -> None:
+        """Append one trial-shaped record to the study's trial log — the
+        seam non-scheduler trial producers (per-window online measurements)
+        persist through, so :meth:`trials` and ``read_log`` see one stream.
+        No-op for an in-memory study with no log file."""
+        if self.log_path is None:
+            return
+        self.log_path.parent.mkdir(parents=True, exist_ok=True)
+        with self.log_path.open("a") as f:
+            f.write(json.dumps({"ts": time.time(), **rec}, default=str) + "\n")
+
     def resume(
         self,
         evaluator: Any = None,
@@ -753,6 +835,11 @@ class Study:
         with no matching ``done``), paying only the unpaid remainder — every
         trial the crashed session persisted replays from the cache, and a
         history-aware strategy resumes with the budget it already spent.
+
+        Online serving sessions (``mode="online"``) are not resumable here:
+        their state is a surviving baseline, not an unpaid strategy budget —
+        ``repro.launch.serve --online-tune`` re-enters them via
+        :func:`repro.serving.journal.surviving_baseline`.
 
         The evaluator is rebuilt from the session's stored
         ``EvaluatorSpec`` recipe when it has one; otherwise pass
@@ -782,6 +869,7 @@ class Study:
         open_recs = [
             r for r in self._sessions
             if r["event"] == "start" and r["session"] not in closed
+            and r.get("mode", "offline") != "online"
         ]
         if not open_recs:
             raise ValueError(
@@ -1048,11 +1136,16 @@ class Study:
                 row["transfer_siblings"] = len(tr.get("siblings") or [])
             if rec.get("resumes") is not None:
                 row["resumes"] = rec["resumes"]
+            if rec.get("mode", "offline") != "offline":
+                row["mode"] = rec["mode"]
             if sid in done:
                 s = done[sid].get("summary", {})
                 for k in ("default_time_s", "best_time_s", "reduction_pct",
                           "evaluations", "timeouts", "infeasible_static",
-                          "cache_stats", "rungs", "best_fidelity"):
+                          "cache_stats", "rungs", "best_fidelity",
+                          # online serving sessions: guard-decision counters
+                          "windows", "rollbacks", "promotions", "demotions",
+                          "rejections"):
                     if k in s:
                         row[k] = s[k]
             rows.append(row)

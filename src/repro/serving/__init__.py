@@ -1,0 +1,58 @@
+"""Online serving tuner — a safety-bounded control loop over batched decode.
+
+The offline tuner (the paper's workflow) measures candidate configs against a
+fixed workload; this subsystem tunes *live*, the way arXiv:2309.01901 tunes
+Spark against production traffic:
+
+  - :mod:`repro.serving.metrics` — streaming per-window latency/throughput
+    monitoring (p50/p99 over a sliding reservoir, injectable clock so
+    simulations are deterministic),
+  - :mod:`repro.serving.controller` — the :class:`OnlineController`: the
+    incumbent (baseline) config always holds the majority traffic slice; one
+    strategy-proposed candidate at a time serves a bounded probation slice
+    and is rolled back the moment its windowed p99 regresses past the safety
+    bound, or promoted to the new baseline when it survives with a measured
+    improvement,
+  - :mod:`repro.serving.journal` — every guard decision journaled into Study
+    storage (``sessions.jsonl``/``trials.jsonl``) with the same provenance as
+    offline sessions; an interrupted run resumes with the surviving baseline,
+  - :mod:`repro.serving.traffic` — scripted synthetic traffic (phase shifts,
+    injected regressions) driving the CI smokes and the simulation suite.
+
+Invariant (enforced by ``tools/reprolint.py`` rule ``serving-injected-clock``):
+no module in this package reads the wall clock directly — time enters only
+through injected ``clock=`` callables, so every decision stream is a pure
+function of (seed, trace).
+"""
+from repro.serving.controller import (
+    GuardConfig,
+    OnlineController,
+    WindowPlan,
+)
+from repro.serving.journal import OnlineJournal, surviving_baseline
+from repro.serving.metrics import (
+    DecodeWindowMonitor,
+    WindowStats,
+    quantile,
+)
+from repro.serving.traffic import (
+    TRACES,
+    SyntheticServeModel,
+    TrafficPhase,
+    scripted_trace,
+)
+
+__all__ = [
+    "DecodeWindowMonitor",
+    "GuardConfig",
+    "OnlineController",
+    "OnlineJournal",
+    "SyntheticServeModel",
+    "TRACES",
+    "TrafficPhase",
+    "WindowPlan",
+    "WindowStats",
+    "quantile",
+    "scripted_trace",
+    "surviving_baseline",
+]

@@ -1,0 +1,401 @@
+"""OnlineController — safety-bounded live tuning over decode windows.
+
+The offline engine evaluates candidate configs against a fixed workload; in
+serving there is no second copy of production to experiment on. Following the
+online-tuning setting of arXiv:2309.01901, the controller partitions decode
+windows into traffic slices:
+
+  - the **incumbent (baseline)** config always serves the majority slice —
+    structurally: candidate windows occur at most once per round of
+    ``ceil(1 / slice_frac)`` windows, and ``slice_frac < 0.5`` is validated,
+    so at every prefix of the run baseline windows strictly outnumber
+    candidate windows;
+  - **one candidate at a time** (proposed by any registered ask/tell
+    strategy, vetted by the static prefilter before it ever serves traffic)
+    serves the probation slice;
+  - the moment a candidate window's p99 regresses past
+    ``safety_p99 × baseline_p99`` the candidate is **rolled back** and told
+    to the strategy as a penalty observation (``Trial.score`` = infeasible);
+  - a candidate that survives ``probation_windows`` candidate windows with a
+    measured improvement (median probation p99 at least ``promote_margin``
+    below the baseline reference) is **promoted** to the new baseline; one
+    that survives without improving is demoted — told to the strategy as an
+    honest (non-penalty) observation.
+
+Determinism contract: the controller reads no clock and draws no randomness
+of its own — the decision stream is a pure function of (strategy seed,
+observed WindowStats sequence). The ``serving-injected-clock`` lint rule
+enforces the clock half package-wide.
+"""
+from __future__ import annotations
+
+import math
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Deque, Dict, List, Optional
+
+from repro.core.scheduler import INFEASIBLE, Trial
+from repro.core.space import TunableSpace
+from repro.core.transfer import snap_into_space
+from repro.serving.metrics import WindowStats, quantile
+
+__all__ = ["GuardConfig", "OnlineController", "WindowPlan"]
+
+
+@dataclass(frozen=True)
+class GuardConfig:
+    """The safety envelope, validated in one place.
+
+    ``safety_p99``        rollback bound: a candidate window whose p99
+                          exceeds ``safety_p99 × baseline_p99`` is rolled
+                          back immediately (must be > 1)
+    ``slice_frac``        fraction of decode windows the candidate may serve;
+                          must be in (0, 0.5) so the baseline holds a strict
+                          majority by construction
+    ``probation_windows`` candidate windows a candidate must survive before
+                          the promote/demote decision — the rollback budget:
+                          a regressing candidate serves at most this many
+                          windows before it is gone
+    ``baseline_window``   how many recent baseline windows feed the rolling
+                          baseline p99 reference (median — robust to one
+                          noisy window)
+    ``promote_margin``    fractional p99 improvement required to promote
+                          (0.03 = 3% better than baseline; guards against
+                          promoting noise)
+    ``warmup_windows``    baseline-only windows before the first candidate
+                          may serve (the reference must exist before anything
+                          is judged against it)
+    """
+
+    safety_p99: float = 1.25
+    slice_frac: float = 0.2
+    probation_windows: int = 3
+    baseline_window: int = 8
+    promote_margin: float = 0.03
+    warmup_windows: int = 2
+
+    def __post_init__(self):
+        if not self.safety_p99 > 1.0:
+            raise ValueError(
+                f"safety_p99 must be > 1 (a bound at or below the baseline "
+                f"would roll back healthy candidates), got {self.safety_p99}"
+            )
+        if not 0.0 < self.slice_frac < 0.5:
+            raise ValueError(
+                f"slice_frac must be in (0, 0.5) — the baseline must hold a "
+                f"strict majority of traffic, got {self.slice_frac}"
+            )
+        if int(self.probation_windows) < 1:
+            raise ValueError(
+                f"probation_windows must be >= 1, got {self.probation_windows}"
+            )
+        if int(self.baseline_window) < 1:
+            raise ValueError(
+                f"baseline_window must be >= 1, got {self.baseline_window}"
+            )
+        if not 0.0 <= self.promote_margin < 1.0:
+            raise ValueError(
+                f"promote_margin must be in [0, 1), got {self.promote_margin}"
+            )
+        if int(self.warmup_windows) < 1:
+            raise ValueError(
+                f"warmup_windows must be >= 1, got {self.warmup_windows}"
+            )
+
+    @property
+    def round_length(self) -> int:
+        """Windows per scheduling round; the last window of each round is
+        the (at most one) candidate slot. ``slice_frac < 0.5`` makes this
+        >= 3, so every round is majority-baseline."""
+        return max(3, int(math.ceil(1.0 / self.slice_frac)))
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "safety_p99": self.safety_p99,
+            "slice_frac": self.slice_frac,
+            "probation_windows": self.probation_windows,
+            "baseline_window": self.baseline_window,
+            "promote_margin": self.promote_margin,
+            "warmup_windows": self.warmup_windows,
+        }
+
+
+@dataclass(frozen=True)
+class WindowPlan:
+    """What the serving loop should do for one decode window."""
+
+    window: int
+    slice: str  # "baseline" | "candidate"
+    config: Dict[str, Any]
+    candidate_id: Optional[int] = None  # stable id of the probing candidate
+
+
+@dataclass
+class _Candidate:
+    cid: int
+    config: Dict[str, Any]
+    probation_p99: List[float] = field(default_factory=list)
+
+
+class OnlineController:
+    """The control loop: call :meth:`next_window` before serving each decode
+    window, serve it under the returned plan's config, then feed the
+    measured :class:`WindowStats` back through :meth:`observe`.
+
+    ``journal`` (optional) receives every window record and guard decision —
+    see :class:`repro.serving.journal.OnlineJournal`; any object with
+    ``window(plan, stats)`` / ``decision(kind, **fields)`` methods works.
+    ``prefilter`` (optional) is the PR-8 static gate: proposals it rejects
+    are journaled and told to the strategy as ``infeasible_static`` penalty
+    observations without ever serving traffic.
+    """
+
+    # cap on consecutive strategy proposals vetted per candidate slot — a
+    # strategy stuck proposing statically-infeasible configs must not spin
+    # the window loop forever
+    MAX_VETS_PER_SLOT = 16
+
+    def __init__(
+        self,
+        space: TunableSpace,
+        strategy: Any,
+        baseline: Dict[str, Any],
+        *,
+        guard: Optional[GuardConfig] = None,
+        journal: Optional[Any] = None,
+        prefilter: Optional[Any] = None,
+        platform: str = "serve",
+    ):
+        self.space = space
+        self.strategy = strategy
+        self.guard = guard or GuardConfig()
+        self.journal = journal
+        self.prefilter = prefilter
+        self.platform = platform
+        # every config the controller ever serves or judges lives on the
+        # space's grid — an off-grid baseline would be a config the tuner
+        # could never re-propose or compare against
+        self.baseline = snap_into_space(space, baseline)
+        self.baseline_start = dict(self.baseline)
+        self._baseline_p99: Deque[float] = deque(
+            maxlen=int(self.guard.baseline_window)
+        )
+        self._candidate: Optional[_Candidate] = None
+        self._next_cid = 1
+        self._expected_window = 0
+        self._pending_plan: Optional[WindowPlan] = None
+        self.windows_baseline = 0
+        self.windows_candidate = 0
+        self.rollbacks = 0
+        self.promotions = 0
+        self.demotions = 0
+        self.rejections = 0
+        self.start_p99: Optional[float] = None  # first post-warmup reference
+
+    # ------------------------------------------------------------- planning
+
+    @property
+    def windows_total(self) -> int:
+        return self.windows_baseline + self.windows_candidate
+
+    @property
+    def baseline_p99(self) -> Optional[float]:
+        """Rolling baseline reference: median p99 of the recent baseline
+        windows (None until one exists)."""
+        if not self._baseline_p99:
+            return None
+        return quantile(list(self._baseline_p99), 0.5)
+
+    def next_window(self) -> WindowPlan:
+        """Plan the next decode window. At most one window may be planned
+        ahead; :meth:`observe` must consume the plan before the next call."""
+        if self._pending_plan is not None:
+            raise RuntimeError(
+                "next_window() called again before observe() consumed the "
+                f"plan for window {self._pending_plan.window}"
+            )
+        w = self._expected_window
+        plan = WindowPlan(w, "baseline", dict(self.baseline))
+        if self._candidate_slot(w):
+            if self._candidate is None:
+                self._acquire_candidate()
+            if self._candidate is not None:
+                plan = WindowPlan(
+                    w, "candidate", dict(self._candidate.config),
+                    candidate_id=self._candidate.cid,
+                )
+        self._pending_plan = plan
+        return plan
+
+    def _candidate_slot(self, window: int) -> bool:
+        """Deterministic traffic partition: the last window of each round is
+        the candidate slot (so every round starts with baseline windows and
+        the baseline majority holds at every prefix of the run); the first
+        ``warmup_windows`` windows are always baseline — the rollback
+        reference must exist before anything is judged against it."""
+        if window < self.guard.warmup_windows or self.baseline_p99 is None:
+            return False
+        return window % self.guard.round_length == self.guard.round_length - 1
+
+    def _acquire_candidate(self) -> None:
+        """Pull the next strategy proposal, snapped into the space and vetted
+        by the static prefilter; rejected proposals are penalty-told (the
+        strategy steers away) and never serve traffic."""
+        for _ in range(self.MAX_VETS_PER_SLOT):
+            if getattr(self.strategy, "done", False):
+                return
+            asked = self.strategy.ask(1)
+            if not asked:
+                return
+            config = snap_into_space(self.space, asked[0])
+            rejection = (
+                self.prefilter(config, self.platform, 1.0)
+                if self.prefilter is not None else None
+            )
+            if rejection is None:
+                cid = self._next_cid
+                self._next_cid += 1
+                self._candidate = _Candidate(cid, config)
+                self._decision(
+                    "probation_start", candidate=cid, config=config,
+                    baseline_p99=self.baseline_p99,
+                    bound=self.guard.safety_p99,
+                    probation_windows=self.guard.probation_windows,
+                )
+                return
+            self.rejections += 1
+            self._decision(
+                "reject_static", config=config, rule=rejection.rule,
+                reason=rejection.reason,
+            )
+            self.strategy.tell([Trial(
+                dict(config), INFEASIBLE,
+                {"prefilter_rule": rejection.rule, **rejection.detail},
+                error=f"InfeasibleStatic[{rejection.rule}]: {rejection.reason}",
+                status="infeasible_static", source="prefilter",
+            )])
+
+    # ------------------------------------------------------------ observing
+
+    def observe(self, plan: WindowPlan, stats: WindowStats) -> None:
+        """Feed one served window's measurement back; guard decisions
+        (rollback / promote / demote) happen here, immediately."""
+        if self._pending_plan is None or plan.window != self._pending_plan.window:
+            raise RuntimeError(
+                f"observe() got window {plan.window}, expected plan "
+                f"{self._pending_plan.window if self._pending_plan else None}"
+            )
+        self._pending_plan = None
+        self._expected_window += 1
+        if self.journal is not None:
+            self.journal.window(plan, stats)
+        if plan.slice == "baseline":
+            self.windows_baseline += 1
+            self._baseline_p99.append(stats.p99)
+            warm = min(self.guard.warmup_windows, self.guard.baseline_window)
+            if self.start_p99 is None and len(self._baseline_p99) >= warm:
+                self.start_p99 = self.baseline_p99
+            return
+        self.windows_candidate += 1
+        cand = self._candidate
+        if cand is None or plan.candidate_id != cand.cid:
+            raise RuntimeError(
+                f"observe() for candidate {plan.candidate_id} but the active "
+                f"candidate is {cand.cid if cand else None}"
+            )
+        ref = self.baseline_p99
+        assert ref is not None  # candidate slots require a reference
+        bound = self.guard.safety_p99 * ref
+        if stats.p99 > bound:
+            self._rollback(cand, stats, ref, bound)
+            return
+        cand.probation_p99.append(stats.p99)
+        if len(cand.probation_p99) >= self.guard.probation_windows:
+            self._resolve_probation(cand, ref)
+
+    def _rollback(
+        self, cand: _Candidate, stats: WindowStats, ref: float, bound: float
+    ) -> None:
+        self.rollbacks += 1
+        self._candidate = None
+        self._decision(
+            "rollback", candidate=cand.cid, config=cand.config,
+            p99=stats.p99, baseline_p99=ref, bound=bound,
+            windows_served=len(cand.probation_p99) + 1,
+        )
+        # penalty observation: the measurement is real (time_s keeps it for
+        # analysis) but the strategy ranks on Trial.score, which is
+        # infeasible for any non-ok status — TPE/CRS steer away
+        self.strategy.tell([Trial(
+            dict(cand.config), float(stats.p99), {"baseline_p99": ref},
+            error=(
+                f"RollbackGuard: candidate p99 {stats.p99:.6g}s exceeded "
+                f"{self.guard.safety_p99:g}x baseline ({bound:.6g}s)"
+            ),
+            status="rollback",
+        )])
+
+    def _resolve_probation(self, cand: _Candidate, ref: float) -> None:
+        cand_p99 = quantile(cand.probation_p99, 0.5)
+        self._candidate = None
+        if cand_p99 <= ref * (1.0 - self.guard.promote_margin):
+            self.promotions += 1
+            self.baseline = dict(cand.config)
+            # the probation measurements WERE baseline-config measurements
+            # from this moment on — seed the new reference from them instead
+            # of judging the next candidate against the dethroned config
+            self._baseline_p99.clear()
+            self._baseline_p99.extend(cand.probation_p99)
+            self._decision(
+                "promote", candidate=cand.cid, config=cand.config,
+                candidate_p99=cand_p99, baseline_p99=ref,
+                margin=self.guard.promote_margin,
+            )
+        else:
+            self.demotions += 1
+            self._decision(
+                "demote", candidate=cand.cid, config=cand.config,
+                candidate_p99=cand_p99, baseline_p99=ref,
+            )
+        # either way the probation produced an honest full measurement
+        self.strategy.tell([Trial(
+            dict(cand.config), float(cand_p99), {"baseline_p99": ref},
+        )])
+
+    # ------------------------------------------------------------ reporting
+
+    def _decision(self, kind: str, **fields: Any) -> None:
+        if self.journal is not None:
+            self.journal.decision(kind, **fields)
+
+    def summary(self) -> Dict[str, Any]:
+        """Session summary in the offline TuneOutcome vocabulary, so an
+        online session's ``done`` record reads like any other in
+        ``Study.report()``: ``default_time_s`` is the starting baseline's
+        post-warmup p99, ``best_time_s`` the final baseline's rolling p99,
+        ``evaluations`` the resolved candidate probations."""
+        final_p99 = self.baseline_p99
+        default = self.start_p99 if self.start_p99 is not None else float("inf")
+        best = final_p99 if final_p99 is not None else default
+        reduction = (
+            100.0 * (default - best) / default
+            if default not in (0.0, float("inf")) else 0.0
+        )
+        return {
+            "platform": self.platform,
+            "algorithm": getattr(self.strategy, "tag", "online"),
+            "default_time_s": default,
+            "best_time_s": best,
+            "reduction_pct": round(reduction, 2),
+            "evaluations": self.rollbacks + self.promotions + self.demotions,
+            "windows": self.windows_total,
+            "windows_baseline": self.windows_baseline,
+            "windows_candidate": self.windows_candidate,
+            "rollbacks": self.rollbacks,
+            "promotions": self.promotions,
+            "demotions": self.demotions,
+            "rejections": self.rejections,
+            "baseline_start": dict(self.baseline_start),
+            "best_config": dict(self.baseline),
+            "guard": self.guard.to_dict(),
+        }

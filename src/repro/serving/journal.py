@@ -1,0 +1,124 @@
+"""OnlineJournal — guard decisions and window stats into Study storage.
+
+An online session must be as auditable as an offline one: the ``start`` /
+``done`` records land in ``sessions.jsonl`` through the Study's public
+session seam (so ``Study.report()`` shows online rows alongside offline
+sessions with no special casing), every guard decision (probation start,
+static rejection, rollback, promotion, demotion — each carrying the bound
+value and the window stats it was made on) is an event record against that
+session, and every served window writes a trial-shaped record into
+``trials.jsonl`` (``source="online"``, ``time_s`` = the window's p99).
+
+:func:`surviving_baseline` is the resume path: an interrupted online run has
+no unpaid strategy budget to replay — its state is *which config holds the
+baseline slice* — so ``serve.py --online-tune`` re-reads the journal and
+starts the next session from the last promoted baseline.
+
+No wall-clock reads here (``serving-injected-clock``): timestamps are
+stamped by the Study's own record writers.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+from repro.serving.controller import GuardConfig, WindowPlan
+from repro.serving.metrics import WindowStats
+
+__all__ = ["OnlineJournal", "surviving_baseline"]
+
+# the sessions.jsonl event name guard decisions are journaled under
+GUARD_EVENT = "guard"
+
+
+class OnlineJournal:
+    """The controller-facing journal: ``window(plan, stats)`` per served
+    window, ``decision(kind, **fields)`` per guard decision, ``finish``
+    to close the session with its summary."""
+
+    def __init__(
+        self,
+        study: Any,
+        platform: str,
+        *,
+        algorithm: str,
+        guard: GuardConfig,
+        baseline: Dict[str, Any],
+        strategy_args: Optional[Dict[str, Any]] = None,
+    ):
+        self.study = study
+        self.platform = platform
+        self.session = study.begin_session(
+            platform,
+            algorithm,
+            space="serve",
+            mode="online",
+            args={
+                "guard": guard.to_dict(),
+                "baseline": dict(baseline),
+                **(strategy_args or {}),
+            },
+        )
+
+    def window(self, plan: WindowPlan, stats: WindowStats) -> None:
+        """One served window into the trial log: ``time_s`` is the window's
+        p99 (the quantity guard decisions rank), the full window stats ride
+        in ``info`` along with which slice served it."""
+        self.study.append_trial_record({
+            "platform": self.platform,
+            "tag": f"online/{plan.slice}",
+            "cached": False,
+            "config": dict(plan.config),
+            "time_s": stats.p99,
+            "wall_s": stats.wall_s,
+            "error": None,
+            "status": "ok",
+            "source": "online",
+            "info": {
+                **stats.to_dict(),
+                "slice": plan.slice,
+                "candidate": plan.candidate_id,
+            },
+        })
+
+    def decision(self, kind: str, **fields: Any) -> None:
+        self.study.record_session_event(
+            self.session, GUARD_EVENT, {"kind": kind, **fields}
+        )
+
+    def finish(self, summary: Dict[str, Any]) -> None:
+        self.study.end_session(self.session, summary)
+
+
+def surviving_baseline(
+    study: Any, platform: str
+) -> Optional[Dict[str, Any]]:
+    """The baseline config an interrupted (or completed) online run left
+    holding the majority slice for ``platform`` — the config the next
+    ``--online-tune`` session must start from.
+
+    Walks the session journal in file order: each online ``start`` record's
+    recorded baseline, superseded by every ``promote`` decision within that
+    platform's online sessions. Returns None when the study has no online
+    history for the platform (the caller falls back to defaults or
+    ``--tuned-config``)."""
+    online_sessions: set = set()
+    baseline: Optional[Dict[str, Any]] = None
+    for rec in study.sessions():
+        event = rec.get("event")
+        if (
+            event == "start"
+            and rec.get("mode") == "online"
+            and rec.get("platform") == platform
+        ):
+            online_sessions.add(rec.get("session"))
+            start_baseline = (rec.get("args") or {}).get("baseline")
+            if start_baseline:
+                baseline = dict(start_baseline)
+        elif (
+            event == GUARD_EVENT
+            and rec.get("kind") == "promote"
+            and rec.get("session") in online_sessions
+            and rec.get("config")
+        ):
+            baseline = dict(rec["config"])
+    return baseline

@@ -1,0 +1,170 @@
+"""Scripted synthetic traffic for the online tuner.
+
+Real serving traffic shifts under the tuner's feet — prompt lengths drift,
+batch sizes change, and the config that was optimal for the old mix regresses
+on the new one. This module scripts those dynamics so the simulation suite
+and the CI smokes can assert guard behaviour exactly:
+
+  - a **trace** is a sequence of :class:`TrafficPhase` records; each phase
+    fixes the workload mix (prompt length, batch) and the *ground-truth
+    optimum* (``ideal_block_kv``, ``ideal_kv_dtype``) for its duration;
+  - :class:`SyntheticServeModel` turns (window index, config, slice) into a
+    deterministic per-token latency list: configs near the phase optimum are
+    fast, distance is charged as ``amp * 0.25 * |log2(bkv) - log2(ideal)|``
+    plus a flat penalty for the wrong KV-cache dtype, and a seeded
+    per-window jitter + tail sample keep p99 honestly above p50;
+  - the ``regression`` trace injects a ``spike`` multiplier on every window
+    served by a non-baseline slice — "any change regresses here" — which the
+    safety guard must catch within the probation budget.
+
+All randomness is ``random.Random`` seeded from integers only (string seeds
+would be PYTHONHASHSEED-dependent), keyed per (seed, window) and independent
+of the config — so the full decision stream of a simulated run is a pure
+function of (seed, trace), which the simulation suite asserts by replay.
+No wall-clock reads (``serving-injected-clock``): latencies are scripted.
+"""
+from __future__ import annotations
+
+import math
+import random
+from dataclasses import dataclass
+from typing import Any, Dict, List, Tuple
+
+__all__ = ["TRACES", "SyntheticServeModel", "TrafficPhase", "scripted_trace"]
+
+
+@dataclass(frozen=True)
+class TrafficPhase:
+    """One stretch of workload with a fixed ground-truth optimum.
+
+    ``windows``        decode windows the phase lasts (the final phase
+                       extends indefinitely if the run is longer)
+    ``prompt_len``     prompt tokens per request — longer prompts cost more
+    ``batch``          requests per decode step (tokens per step)
+    ``ideal_block_kv`` the ``attn_block_kv`` value that is optimal here
+    ``ideal_kv_dtype`` the ``kv_cache_dtype`` that is optimal here
+    ``amp``            how hard config distance is punished (0 = all configs
+                       equal — the "flat" trace)
+    ``spike``          latency multiplier applied to windows served by a
+                       non-baseline slice (an injected regression: any
+                       config change during this phase goes bad)
+    """
+
+    name: str
+    windows: int
+    prompt_len: int
+    batch: int
+    ideal_block_kv: int = 512
+    ideal_kv_dtype: str = "bfloat16"
+    amp: float = 1.0
+    spike: float = 1.0
+
+
+# Named traces the CLI (--traffic) and CI smokes run.
+#
+#   flat        one phase, amp=0: every config performs identically up to
+#               jitter — the guard must fire zero rollbacks.
+#   regression  defaults are already optimal and every candidate slice is
+#               spiked 1.6x — each candidate's first window breaches the
+#               1.25x bound, so rollback must land within one probation
+#               window and the baseline must never be displaced.
+#   drift       phase 1 favours the defaults; phase 2 shifts to short
+#               prompts where attn_block_kv=128 + int8 KV cache win — the
+#               controller must promote a measurably better baseline.
+TRACES: Dict[str, Tuple[TrafficPhase, ...]] = {
+    "flat": (
+        TrafficPhase("steady", windows=64, prompt_len=512, batch=8, amp=0.0),
+    ),
+    "regression": (
+        TrafficPhase(
+            "poisoned", windows=64, prompt_len=512, batch=8,
+            amp=1.0, spike=1.6,
+        ),
+    ),
+    "drift": (
+        TrafficPhase("long-prompts", windows=16, prompt_len=2048, batch=8),
+        TrafficPhase(
+            "short-prompts", windows=96, prompt_len=256, batch=16,
+            ideal_block_kv=128, ideal_kv_dtype="int8", amp=2.0,
+        ),
+    ),
+}
+
+
+def scripted_trace(name: str) -> Tuple[TrafficPhase, ...]:
+    try:
+        return TRACES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown trace {name!r}; known: {sorted(TRACES)}"
+        ) from None
+
+
+class SyntheticServeModel:
+    """Deterministic latency generator over a scripted trace.
+
+    ``latencies(window, config, slice_name)`` returns the per-decode-step
+    latency list for one window: the config's phase cost (see module
+    docstring), a seeded multiplicative jitter drawn per window (identical
+    whichever config serves the window — decisions depend on the config,
+    never on which random numbers it happened to draw), and one tail sample
+    so every window's p99 sits visibly above its p50.
+    """
+
+    # decode steps simulated per window — enough samples for a stable
+    # p50/p99 spread without slowing the CI smokes
+    STEPS_PER_WINDOW = 24
+    JITTER = 0.01      # +/- multiplicative body noise
+    TAIL = 1.12        # tail-sample multiplier (keeps p99 > p50)
+    DTYPE_PENALTY = 1.10  # cost of serving with the wrong KV-cache dtype
+
+    def __init__(self, trace: Tuple[TrafficPhase, ...], seed: int = 0):
+        if not trace:
+            raise ValueError("trace must have at least one phase")
+        self.trace = tuple(trace)
+        self.seed = int(seed)
+
+    @property
+    def total_windows(self) -> int:
+        return sum(p.windows for p in self.trace)
+
+    def phase_at(self, window: int) -> TrafficPhase:
+        """The phase governing ``window``; the last phase extends forever so
+        a run longer than the script stays in the final regime."""
+        if window < 0:
+            raise ValueError(f"negative window {window}")
+        offset = 0
+        for phase in self.trace:
+            offset += phase.windows
+            if window < offset:
+                return phase
+        return self.trace[-1]
+
+    def cost(self, config: Dict[str, Any], phase: TrafficPhase) -> float:
+        """Noise-free per-step latency for ``config`` under ``phase``."""
+        base = 0.004 * (1.0 + phase.prompt_len / 2048.0)
+        bkv = int(config.get("attn_block_kv", 512))
+        dist = abs(math.log2(bkv) - math.log2(phase.ideal_block_kv))
+        cost = base * (1.0 + phase.amp * 0.25 * dist)
+        if config.get("kv_cache_dtype", "bfloat16") != phase.ideal_kv_dtype:
+            cost *= self.DTYPE_PENALTY
+        if config.get("matmul_precision", "bf16") == "f32":
+            cost *= 1.02
+        return cost
+
+    def latencies(
+        self, window: int, config: Dict[str, Any], slice_name: str
+    ) -> List[float]:
+        phase = self.phase_at(window)
+        cost = self.cost(config, phase)
+        if slice_name != "baseline":
+            cost *= phase.spike
+        # integer-keyed seeding: string/tuple-of-string seeds would vary
+        # with PYTHONHASHSEED across processes
+        rng = random.Random(self.seed * 1_000_003 + window)
+        out = [
+            cost * (1.0 + rng.uniform(-self.JITTER, self.JITTER))
+            for _ in range(self.STEPS_PER_WINDOW - 1)
+        ]
+        out.append(cost * self.TAIL * (1.0 + rng.uniform(0.0, self.JITTER)))
+        return out

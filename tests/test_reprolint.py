@@ -169,6 +169,49 @@ def test_escape_hatch_suppresses(tmp_path):
     assert run_lint(tmp_path, src, subdir="strategies") == []
 
 
+# -------------------------------------------------- serving injected clock
+
+
+def test_wallclock_in_serving_flagged(tmp_path):
+    src = ("import time\n\n"
+           "def end_window():\n"
+           "    return time.perf_counter()\n")
+    findings = run_lint(tmp_path, src, subdir="serving")
+    assert rules(findings) == ["serving-injected-clock"]
+
+
+def test_datetime_now_in_serving_flagged(tmp_path):
+    src = ("from datetime import datetime\nimport time\n\n"
+           "def stamp():\n"
+           "    return datetime.now(), time.time()\n")
+    findings = run_lint(tmp_path, src, subdir="serving")
+    assert rules(findings) == ["serving-injected-clock",
+                               "serving-injected-clock"]
+
+
+def test_wallclock_outside_serving_allowed(tmp_path):
+    # the serve driver injects time.perf_counter from launch/ — reading the
+    # clock is fine there, only serving/ decision code is banned
+    src = "import time\n\ndef drive():\n    return time.perf_counter()\n"
+    assert run_lint(tmp_path, src, subdir="launch") == []
+
+
+def test_serving_escape_hatch(tmp_path):
+    src = ("import time\n\n"
+           "def f():\n"
+           "    return time.time()  # reprolint: ok\n")
+    assert run_lint(tmp_path, src, subdir="serving") == []
+
+
+def test_injected_clock_reference_is_not_a_call(tmp_path):
+    # passing the callable through (clock=time.perf_counter) is the whole
+    # point of the injection seam — only *calls* are reads
+    src = ("import time\n\n"
+           "def make_monitor(Monitor):\n"
+           "    return Monitor(clock=time.perf_counter)\n")
+    assert run_lint(tmp_path, src, subdir="serving") == []
+
+
 def test_syntax_error_reported_not_crashed(tmp_path):
     findings = run_lint(tmp_path, "def broken(:\n")
     assert rules(findings) == ["parse-error"]

@@ -1,0 +1,545 @@
+"""Deterministic simulation suite for the online serving tuner.
+
+Everything here runs on injected clocks and scripted latency traces — no JAX,
+no wall time in any decision path — so every assertion about guard behaviour
+(rollback inside the probation budget, baseline majority at every prefix,
+exactly-once promotion, decision-stream determinism) is exact, not
+statistical."""
+import json
+
+import pytest
+
+from repro.core import Study
+from repro.core.feasibility import Rejection
+from repro.core.scheduler import INFEASIBLE
+from repro.core.space import SERVE_SPACE
+from repro.core.strategies import make_strategy
+from repro.core.transfer import snap_into_space
+from repro.serving import (
+    DecodeWindowMonitor,
+    GuardConfig,
+    OnlineController,
+    OnlineJournal,
+    SyntheticServeModel,
+    TrafficPhase,
+    WindowStats,
+    quantile,
+    scripted_trace,
+    surviving_baseline,
+)
+
+DEFAULTS = snap_into_space(SERVE_SPACE, {})
+
+
+# ------------------------------------------------------------------ doubles
+
+
+class FakeStrategy:
+    """Ask/tell double: serves queued configs, records every tell."""
+
+    tag = "fake"
+    done = False
+
+    def __init__(self, configs):
+        self.queue = [dict(c) for c in configs]
+        self.tells = []
+
+    def ask(self, n):
+        out = []
+        while self.queue and len(out) < n:
+            out.append(self.queue.pop(0))
+        return out
+
+    def tell(self, trials):
+        self.tells.extend(trials)
+
+
+class RecordingJournal:
+    def __init__(self):
+        self.windows = []   # (plan, stats)
+        self.decisions = []  # (kind, fields)
+
+    def window(self, plan, stats):
+        self.windows.append((plan, stats))
+
+    def decision(self, kind, **fields):
+        self.decisions.append((kind, fields))
+
+
+def stats(window, p99, p50=None):
+    p50 = p99 * 0.9 if p50 is None else p50
+    return WindowStats(window=window, count=24, p50=p50, p99=p99,
+                       mean=p50, max=p99, tokens_per_s=100.0, wall_s=0.24)
+
+
+def drive(controller, n_windows, base_p99=1.0, cand_p99=2.0):
+    """Serve ``n_windows`` with scripted p99s keyed by the served config
+    (CAND is genuinely cand_p99-fast, everything else base_p99), so a
+    promoted candidate keeps its measured speed as the new baseline."""
+    plans = []
+    for w in range(n_windows):
+        plan = controller.next_window()
+        p = cand_p99 if plan.config == CAND else base_p99
+        controller.observe(plan, stats(w, p))
+        plans.append(plan)
+    return plans
+
+
+CAND = {**DEFAULTS, "attn_block_kv": 256}
+GUARD = GuardConfig()  # slice_frac 0.2 -> round_length 5, warmup 2
+
+
+# ------------------------------------------------------------------- metrics
+
+
+def test_quantile_matches_numpy_convention():
+    vals = [4.0, 1.0, 3.0, 2.0]
+    assert quantile(vals, 0.5) == pytest.approx(2.5)
+    assert quantile(vals, 0.0) == 1.0
+    assert quantile(vals, 1.0) == 4.0
+    assert quantile(vals, 0.99) == pytest.approx(3.97)
+    assert quantile([7.0], 0.25) == 7.0
+
+
+def test_quantile_rejects_bad_input():
+    with pytest.raises(ValueError):
+        quantile([], 0.5)
+    with pytest.raises(ValueError):
+        quantile([1.0], 1.5)
+
+
+def test_monitor_clockless_windows_are_deterministic():
+    def run():
+        mon = DecodeWindowMonitor()
+        mon.begin_window()
+        for lat in (0.01, 0.02, 0.03, 0.04):
+            mon.record(lat, tokens=8)
+        return mon.end_window()
+
+    a, b = run(), run()
+    assert a == b
+    assert a.count == 4
+    assert a.wall_s == pytest.approx(0.10)  # clock=None: sum of latencies
+    assert a.tokens_per_s == pytest.approx(32 / 0.10)
+    assert a.p50 == pytest.approx(0.025)
+    assert a.max == 0.04
+
+
+def test_monitor_injected_clock_measures_wall_time():
+    t = [0.0]
+    mon = DecodeWindowMonitor(clock=lambda: t[0])
+    mon.begin_window()
+    mon.record(0.01)
+    t[0] = 2.0
+    s = mon.end_window()
+    assert s.wall_s == pytest.approx(2.0)
+    assert s.tokens_per_s == pytest.approx(0.5)
+
+
+def test_monitor_protocol_misuse_raises():
+    mon = DecodeWindowMonitor()
+    with pytest.raises(RuntimeError):
+        mon.record(0.01)
+    with pytest.raises(RuntimeError):
+        mon.end_window()
+    mon.begin_window()
+    with pytest.raises(RuntimeError):
+        mon.begin_window()
+    with pytest.raises(RuntimeError):
+        mon.end_window()  # no samples
+    mon.record(0.01)
+    mon.end_window()
+    agg = mon.aggregate()
+    assert agg is not None and agg.count == 1
+
+
+def test_monitor_reservoir_bounds_window_memory():
+    mon = DecodeWindowMonitor(max_samples=8)
+    mon.begin_window()
+    for i in range(100):
+        mon.record(float(i))
+    s = mon.end_window()
+    assert s.count == 8
+    assert s.p50 == pytest.approx(quantile([92.0 + i for i in range(8)], 0.5))
+
+
+# ---------------------------------------------------------------- guard cfg
+
+
+@pytest.mark.parametrize("kwargs", [
+    dict(safety_p99=1.0),
+    dict(safety_p99=0.8),
+    dict(slice_frac=0.0),
+    dict(slice_frac=0.5),   # exactly half: baseline would lose its majority
+    dict(slice_frac=0.7),
+    dict(probation_windows=0),
+    dict(promote_margin=1.0),
+    dict(warmup_windows=0),
+    dict(baseline_window=0),
+])
+def test_guard_config_validates(kwargs):
+    with pytest.raises(ValueError):
+        GuardConfig(**kwargs)
+
+
+def test_round_length_keeps_baseline_majority():
+    assert GuardConfig(slice_frac=0.2).round_length == 5
+    assert GuardConfig(slice_frac=0.45).round_length == 3
+    assert GuardConfig(slice_frac=0.01).round_length == 100
+
+
+# --------------------------------------------------------------- controller
+
+
+def test_regression_rolls_back_within_probation_budget():
+    strategy = FakeStrategy([CAND])
+    journal = RecordingJournal()
+    ctrl = OnlineController(SERVE_SPACE, strategy, DEFAULTS,
+                            guard=GUARD, journal=journal)
+    drive(ctrl, 10, base_p99=1.0, cand_p99=2.0)  # 2.0 > 1.25 * 1.0
+    assert ctrl.rollbacks == 1
+    rollbacks = [f for k, f in journal.decisions if k == "rollback"]
+    assert len(rollbacks) == 1
+    # the rollback budget: a regressing candidate serves at most
+    # probation_windows windows before it is gone
+    assert rollbacks[0]["windows_served"] <= GUARD.probation_windows
+    assert rollbacks[0]["bound"] == pytest.approx(1.25)
+    # the regressing config never becomes the baseline
+    assert ctrl.baseline == DEFAULTS
+    # penalty observation: honest measurement, infeasible score
+    penalty = strategy.tells[-1]
+    assert penalty.status == "rollback"
+    assert penalty.time_s == pytest.approx(2.0)
+    assert penalty.score == INFEASIBLE
+    assert "RollbackGuard" in penalty.error
+
+
+def test_baseline_holds_majority_at_every_prefix():
+    strategy = FakeStrategy([CAND] * 8)
+    journal = RecordingJournal()
+    ctrl = OnlineController(SERVE_SPACE, strategy, DEFAULTS,
+                            guard=GUARD, journal=journal)
+    drive(ctrl, 40, base_p99=1.0, cand_p99=2.0)
+    base = cand = 0
+    for plan, _stats in journal.windows:
+        if plan.slice == "baseline":
+            base += 1
+        else:
+            cand += 1
+        assert base > cand, f"candidate majority at window {plan.window}"
+    assert cand > 0  # the guarantee was actually exercised
+
+
+def test_surviving_improvement_promotes_exactly_once():
+    strategy = FakeStrategy([CAND])
+    journal = RecordingJournal()
+    ctrl = OnlineController(SERVE_SPACE, strategy, DEFAULTS,
+                            guard=GUARD, journal=journal)
+    drive(ctrl, 20, base_p99=1.0, cand_p99=0.9)  # 10% better, margin is 3%
+    assert ctrl.promotions == 1
+    promotes = [f for k, f in journal.decisions if k == "promote"]
+    assert len(promotes) == 1
+    assert promotes[0]["candidate_p99"] < promotes[0]["baseline_p99"]
+    # the candidate is the new incumbent and serves the majority slice
+    assert ctrl.baseline == CAND
+    last_baseline_plan = [p for p, _ in journal.windows
+                          if p.slice == "baseline"][-1]
+    assert last_baseline_plan.config == CAND
+    # the probation produced one honest (non-penalty) observation
+    honest = strategy.tells[-1]
+    assert honest.error is None
+    assert honest.score == pytest.approx(0.9)
+    # summary speaks the offline vocabulary
+    s = ctrl.summary()
+    assert s["best_time_s"] < s["default_time_s"]
+    assert s["best_config"] == CAND
+    assert s["promotions"] == 1 and s["rollbacks"] == 0
+
+
+def test_survivor_without_improvement_is_demoted():
+    strategy = FakeStrategy([CAND])
+    journal = RecordingJournal()
+    ctrl = OnlineController(SERVE_SPACE, strategy, DEFAULTS,
+                            guard=GUARD, journal=journal)
+    drive(ctrl, 20, base_p99=1.0, cand_p99=0.99)  # inside the 3% margin
+    assert ctrl.promotions == 0 and ctrl.demotions == 1
+    assert ctrl.baseline == DEFAULTS
+    honest = strategy.tells[-1]
+    assert honest.error is None and honest.time_s == pytest.approx(0.99)
+
+
+def test_static_rejection_never_serves_traffic():
+    doomed = {**DEFAULTS, "attn_block_kv": 2048}
+
+    def prefilter(config, platform, fidelity):
+        if config["attn_block_kv"] == 2048:
+            return Rejection("test_rule", "doomed by construction",
+                             {"bkv": 2048})
+        return None
+
+    strategy = FakeStrategy([doomed, CAND])
+    journal = RecordingJournal()
+    ctrl = OnlineController(SERVE_SPACE, strategy, DEFAULTS, guard=GUARD,
+                            journal=journal, prefilter=prefilter)
+    drive(ctrl, 10, base_p99=1.0, cand_p99=0.9)
+    assert ctrl.rejections == 1
+    rejects = [f for k, f in journal.decisions if k == "reject_static"]
+    assert len(rejects) == 1 and rejects[0]["rule"] == "test_rule"
+    # the doomed config never appears in any served window
+    assert all(p.config != doomed for p, _ in journal.windows)
+    # ...but was penalty-told so the strategy steers away
+    first_tell = strategy.tells[0]
+    assert first_tell.status == "infeasible_static"
+    assert first_tell.score == INFEASIBLE
+    # the vetted replacement candidate did serve
+    assert any(p.slice == "candidate" and p.config == CAND
+               for p, _ in journal.windows)
+
+
+def test_observe_requires_matching_plan():
+    ctrl = OnlineController(SERVE_SPACE, FakeStrategy([]), DEFAULTS,
+                            guard=GUARD)
+    with pytest.raises(RuntimeError):
+        ctrl.observe(
+            type("P", (), {"window": 0, "slice": "baseline",
+                           "config": DEFAULTS, "candidate_id": None})(),
+            stats(0, 1.0))
+    plan = ctrl.next_window()
+    with pytest.raises(RuntimeError):
+        ctrl.next_window()  # previous plan not observed yet
+    ctrl.observe(plan, stats(0, 1.0))
+
+
+def test_off_grid_baseline_is_snapped():
+    ctrl = OnlineController(
+        SERVE_SPACE, FakeStrategy([]),
+        {"attn_block_kv": 200, "kv_cache_dtype": "int8"}, guard=GUARD)
+    assert ctrl.baseline["attn_block_kv"] == 256
+    assert ctrl.baseline["kv_cache_dtype"] == "int8"
+    assert ctrl.baseline["mesh_model_parallel"] == 16  # default filled
+
+
+# ------------------------------------------------------------- determinism
+
+
+def simulate(trace_name, seed):
+    """One full synthetic run; returns the decision stream."""
+    strategy = make_strategy("random", SERVE_SPACE, max_trials=32, seed=seed)
+    journal = RecordingJournal()
+    ctrl = OnlineController(SERVE_SPACE, strategy, DEFAULTS,
+                            guard=GUARD, journal=journal)
+    model = SyntheticServeModel(scripted_trace(trace_name), seed=seed)
+    mon = DecodeWindowMonitor()
+    for w in range(model.total_windows):
+        plan = ctrl.next_window()
+        mon.begin_window()
+        for lat in model.latencies(w, plan.config, plan.slice):
+            mon.record(lat, tokens=model.phase_at(w).batch)
+        ctrl.observe(plan, mon.end_window())
+    return journal.decisions, ctrl.summary()
+
+
+def test_decision_stream_is_pure_function_of_seed_and_trace():
+    d1, s1 = simulate("drift", seed=7)
+    d2, s2 = simulate("drift", seed=7)
+    assert d1 == d2
+    assert s1 == s2
+    d3, _ = simulate("drift", seed=8)
+    assert d1 != d3  # the seed actually reaches the strategy and traffic
+
+
+def test_flat_trace_never_rolls_back():
+    decisions, summary = simulate("flat", seed=0)
+    assert summary["rollbacks"] == 0
+    assert not any(k == "rollback" for k, _ in decisions)
+
+
+def test_regression_trace_rolls_back_every_candidate():
+    decisions, summary = simulate("regression", seed=0)
+    assert summary["rollbacks"] >= 1
+    assert summary["promotions"] == 0
+    assert all(f["windows_served"] <= GUARD.probation_windows
+               for k, f in decisions if k == "rollback")
+
+
+def test_drift_trace_promotes_a_better_baseline():
+    decisions, summary = simulate("drift", seed=0)
+    assert summary["promotions"] >= 1
+    assert summary["best_time_s"] < summary["default_time_s"]
+    for k, f in decisions:
+        if k == "promote":
+            assert f["candidate_p99"] < f["baseline_p99"]
+
+
+# ----------------------------------------------------------------- traffic
+
+
+def test_phase_schedule_and_final_phase_extension():
+    model = SyntheticServeModel(scripted_trace("drift"))
+    assert model.phase_at(0).name == "long-prompts"
+    assert model.phase_at(15).name == "long-prompts"
+    assert model.phase_at(16).name == "short-prompts"
+    assert model.phase_at(10_000).name == "short-prompts"
+    with pytest.raises(ValueError):
+        model.phase_at(-1)
+    with pytest.raises(ValueError):
+        scripted_trace("nope")
+    with pytest.raises(ValueError):
+        SyntheticServeModel(())
+
+
+def test_traffic_cost_prefers_phase_optimum():
+    phase = TrafficPhase("p", windows=4, prompt_len=256, batch=8,
+                         ideal_block_kv=128, ideal_kv_dtype="int8", amp=2.0)
+    model = SyntheticServeModel((phase,))
+    good = model.cost({"attn_block_kv": 128, "kv_cache_dtype": "int8"}, phase)
+    far = model.cost({"attn_block_kv": 1024, "kv_cache_dtype": "int8"}, phase)
+    wrong_dtype = model.cost(
+        {"attn_block_kv": 128, "kv_cache_dtype": "bfloat16"}, phase)
+    assert good < wrong_dtype < far
+    assert far == pytest.approx(good * (1 + 2.0 * 0.25 * 3))
+
+
+def test_traffic_p99_exceeds_p50():
+    model = SyntheticServeModel(scripted_trace("flat"), seed=1)
+    lats = model.latencies(3, DEFAULTS, "baseline")
+    assert quantile(lats, 0.99) > quantile(lats, 0.5)
+
+
+# ------------------------------------------------------ journal + Study
+
+
+def run_journaled_session(study, n_windows=20, cand_p99=0.9):
+    strategy = FakeStrategy([CAND])
+    journal = OnlineJournal(study, "serve-online/test",
+                            algorithm="online-fake", guard=GUARD,
+                            baseline=DEFAULTS)
+    ctrl = OnlineController(SERVE_SPACE, strategy, DEFAULTS, guard=GUARD,
+                            journal=journal, platform="serve-online/test")
+    drive(ctrl, n_windows, base_p99=1.0, cand_p99=cand_p99)
+    return journal, ctrl
+
+
+def test_online_session_lands_in_study_report(tmp_path):
+    study = Study.create(tmp_path / "study")
+    with study:
+        journal, ctrl = run_journaled_session(study)
+        journal.finish(ctrl.summary())
+
+    loaded = Study.load(tmp_path / "study")
+    rows = loaded.report()["sessions"]
+    assert len(rows) == 1
+    row = rows[0]
+    assert row["mode"] == "online"
+    assert row["status"] == "done"
+    assert row["algorithm"] == "online-fake"
+    assert row["promotions"] == 1 and row["rollbacks"] == 0
+    assert row["windows"] == 20
+    assert row["best_time_s"] < row["default_time_s"]
+    # window records landed in the trial log with online provenance
+    trials = [json.loads(line) for line in
+              (tmp_path / "study" / "trials.jsonl").read_text().splitlines()]
+    assert len(trials) == 20
+    assert all(t["source"] == "online" for t in trials)
+    slices = {t["info"]["slice"] for t in trials}
+    assert slices == {"baseline", "candidate"}
+    # guard decisions are session events in sessions.jsonl
+    recs = [json.loads(line) for line in
+            (tmp_path / "study" / "sessions.jsonl").read_text().splitlines()]
+    kinds = [r.get("kind") for r in recs if r["event"] == "guard"]
+    assert kinds == ["probation_start", "promote"]
+
+
+def test_interrupted_run_resumes_with_surviving_baseline(tmp_path):
+    study = Study.create(tmp_path / "study")
+    with study:
+        journal, ctrl = run_journaled_session(study)
+        # no journal.finish(): the process died mid-run
+
+    loaded = Study.load(tmp_path / "study")
+    assert loaded.report()["sessions"][0]["status"] == "interrupted"
+    # the promoted candidate — not the starting default — survives
+    assert surviving_baseline(loaded, "serve-online/test") == CAND
+    assert surviving_baseline(loaded, "serve-online/other") is None
+    # offline resume() must NOT try to replay the online session
+    with pytest.raises(ValueError, match="nothing to resume"):
+        loaded.resume()
+
+
+def test_surviving_baseline_prefers_latest_promotion(tmp_path):
+    study = Study.create(tmp_path / "study")
+    with study:
+        j1, c1 = run_journaled_session(study, cand_p99=0.9)
+        j1.finish(c1.summary())
+        # second session: no promotion — its start baseline (the defaults
+        # recorded at construction) must not clobber session 1's promote
+        j2 = OnlineJournal(study, "serve-online/test",
+                           algorithm="online-fake", guard=GUARD,
+                           baseline=CAND)
+        c2 = OnlineController(SERVE_SPACE, FakeStrategy([]), CAND,
+                              guard=GUARD, journal=j2,
+                              platform="serve-online/test")
+        drive(c2, 6, base_p99=0.9)
+        j2.finish(c2.summary())
+    loaded = Study.load(tmp_path / "study")
+    assert surviving_baseline(loaded, "serve-online/test") == CAND
+
+
+def test_session_event_rejects_lifecycle_names(tmp_path):
+    study = Study.create(tmp_path / "study")
+    with study:
+        sid = study.begin_session("p", "a", mode="online")
+        with pytest.raises(ValueError):
+            study.record_session_event(sid, "done", {})
+
+
+# ------------------------------------------------------------- CLI smokes
+
+
+def serve_main(argv):
+    from repro.launch.serve import main
+
+    return main(argv)
+
+
+def load_summary(capsys):
+    return json.loads(capsys.readouterr().out)
+
+
+def test_cli_online_regression_smoke(tmp_path, capsys):
+    rc = serve_main(["--online-tune", "--study", str(tmp_path / "s"),
+                     "--traffic", "regression", "--strategy", "random",
+                     "--windows", "20", "--seed", "0"])
+    assert rc == 0
+    s = load_summary(capsys)
+    assert s["rollbacks"] >= 1
+    assert s["promotions"] == 0
+    assert s["windows_baseline"] > s["windows_candidate"]
+    assert s["best_config"] == s["baseline_start"]
+
+
+def test_cli_online_flat_smoke(tmp_path, capsys):
+    rc = serve_main(["--online-tune", "--study", str(tmp_path / "s"),
+                     "--traffic", "flat", "--strategy", "random",
+                     "--windows", "20", "--seed", "0"])
+    assert rc == 0
+    assert load_summary(capsys)["rollbacks"] == 0
+
+
+def test_cli_online_requires_study():
+    with pytest.raises(SystemExit):
+        serve_main(["--online-tune", "--traffic", "flat"])
+
+
+def test_cli_drift_resumes_surviving_baseline(tmp_path, capsys):
+    study = str(tmp_path / "s")
+    argv = ["--online-tune", "--study", study, "--traffic", "drift",
+            "--strategy", "tpe", "--seed", "0"]
+    assert serve_main(argv) == 0
+    s1 = load_summary(capsys)
+    assert s1["promotions"] >= 1
+    assert s1["best_time_s"] < s1["default_time_s"]
+    # run 2 starts from run 1's surviving baseline, not the defaults
+    assert serve_main(argv) == 0
+    s2 = load_summary(capsys)
+    assert s2["baseline_start"] == s1["best_config"]

@@ -31,6 +31,14 @@ once already:
       swallow the kwarg, run the full-size job, and get cached under a
       low-fidelity key as if it were the scaled one.
 
+  ``serving-injected-clock``
+      Online-tuner code (``src/repro/serving/``) must not read the wall
+      clock directly — time enters only through injected ``clock=``
+      callables. The simulation suite and the rollback/promotion CI
+      assertions replay decision streams as pure functions of
+      (seed, trace); one stray ``time.perf_counter()`` in a decision path
+      makes guard behaviour unreproducible.
+
 Suppress a finding by appending ``# reprolint: ok`` to the flagged line.
 
 Usage::
@@ -123,6 +131,24 @@ def lint_strategy_purity(path: Path, tree: ast.AST,
                    "`random.Random(seed)` instance every strategy carries")
 
 
+def lint_serving_clock(path: Path, tree: ast.AST,
+                       lines: List[str]) -> Iterator[Tuple[int, str, str]]:
+    """serving-injected-clock over one serving/ file."""
+    for call in _iter_calls(tree):
+        name = _dotted(call.func)
+        if name is None:
+            continue
+        parts = name.split(".")
+        tail = parts[-1]
+        if (parts[0], tail) in WALLCLOCK_CALLS or (
+            tail in ("now", "utcnow", "today") and "datetime" in parts
+        ):
+            yield (call.lineno, "serving-injected-clock",
+                   f"wall-clock read `{name}()` in serving/ — time enters "
+                   "the online tuner only through injected `clock=` "
+                   "callables (decision streams must replay exactly)")
+
+
 def _class_declares(cls: ast.ClassDef, attr: str) -> bool:
     """Whether ``attr`` appears as a class attribute, an annotated dataclass
     field, or an assignment inside ``__init__``/``__post_init__``."""
@@ -212,6 +238,8 @@ def lint_file(path: Path) -> List[Tuple[Path, int, str, str]]:
     checks = [lint_evaluator_contracts]
     if "strategies" in path.parts:
         checks.append(lint_strategy_purity)
+    if "serving" in path.parts:
+        checks.append(lint_serving_clock)
     for check in checks:
         for lineno, rule, msg in check(path, tree, lines):
             if not _suppressed(lines, lineno):

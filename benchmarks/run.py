@@ -126,6 +126,11 @@ def main(argv=None):
             rows = tables.table_transfer()
             emit(rows); all_rows += rows
 
+            print("\n## §Learned cost surrogate — WordCount matrix, sibling "
+                  "cell with --surrogate off vs rank (equal budgets)")
+            rows = tables.table_surrogate()
+            emit(rows); all_rows += rows
+
         if args.strategy in ("all", "asha"):
             print("\n## §Multi-fidelity ASHA — vs full-fidelity CRS/TPE on "
                   "WordCount (equal search width, fraction of the cost)")

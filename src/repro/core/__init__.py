@@ -12,6 +12,9 @@
   - ``study``      — Study: persistent, resumable tuning sessions + EngineConfig
   - ``transfer``   — cross-cell transfer: sibling histories, cell similarity,
                      config snapping (the ``--transfer off|warm|prior`` modes)
+  - ``surrogate``  — learned cost model over the study cache: ridge
+                     regression that pre-ranks TPE acquisition candidates
+                     (the ``--surrogate off|rank`` modes)
   - ``tuner``      — the Admin facade (Figure I) — deprecated shim over Study
   - ``evaluators`` — walltime (paper-faithful) / roofline (AOT) backends
   - ``roofline``   — TPU v5e roofline terms from compiled artifacts
@@ -42,6 +45,7 @@ from repro.core.strategies import (
     register_strategy,
 )
 from repro.core.study import EngineConfig, Study, StudyCell, TuneOutcome, run_session
+from repro.core.surrogate import SURROGATE_MODES, CostSurrogate
 from repro.core.transfer import (
     TRANSFER_MODES,
     CellKey,
@@ -80,6 +84,8 @@ __all__ = [
     "TuneOutcome",
     "TunableSpace",
     "TRANSFER_MODES",
+    "SURROGATE_MODES",
+    "CostSurrogate",
     "CellKey",
     "SiblingHistory",
     "default_similarity",

@@ -321,8 +321,11 @@ def aot_memory_estimate(fn: Callable[..., Any], *args: Any, **kwargs: Any):
     """Lower ``fn`` ahead of time and statically estimate its peak buffer
     bytes from the HLO text: ``jax.jit(fn).lower(*args)`` →
     :func:`repro.core.hlo.parse_memory`. Costs a trace, not a compile or an
-    execution — the deep-analysis path for compiled (train/serve) programs
-    and the feature extractor the roadmap's cost surrogate trains on.
+    execution — the deep-analysis path for compiled (train/serve) programs.
+    The learned cost surrogate's optional HLO feature channel
+    (:func:`repro.core.surrogate.hlo_features`) extracts from the same
+    lowered text, adding :func:`~repro.core.hlo.parse_collectives` wire
+    bytes next to this peak-memory estimate.
 
     Returns a :class:`repro.core.hlo.MemoryEstimate`."""
     import jax

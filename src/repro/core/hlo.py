@@ -44,7 +44,7 @@ COLLECTIVES = (
 _OP_RE = re.compile(
     r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*"
     r"(?P<shape>\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
-    r"(?P<op>" + "|".join(COLLECTIVES) + r")(?:-start|-done)?\("
+    r"(?P<op>" + "|".join(COLLECTIVES) + r")(?P<async>-start|-done)?\("
 )
 _ARRAY_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](T\([0-9,]+\))?")
@@ -208,16 +208,25 @@ def parse_memory(hlo_text: str) -> MemoryEstimate:
 
 def parse_collectives(hlo_text: str) -> CollectiveStats:
     stats = CollectiveStats()
-    seen_done = set()
     for line in hlo_text.splitlines():
         m = _OP_RE.match(line)
         if not m:
             continue
-        # async pairs: count the -start, skip the matching -done
-        if "-done(" in line[: m.end() + 8]:
+        # async pairs must count ONCE, with the same bytes as the sync op:
+        # skip every -done (its result duplicates the pair's traffic), and on
+        # the -start — whose printed shape is the tuple (operand, result[,
+        # context]) — charge only the result element, never operand + result
+        suffix = m.group("async")
+        if suffix == "-done":
             continue
+        shape = m.group("shape")
+        if suffix == "-start" and shape.startswith("("):
+            arrays = _ARRAY_RE.findall(shape)
+            shape = "".join(
+                f"{dtype}[{dims}]" for dtype, dims in arrays[1:2]
+            ) or shape
         op = m.group("op")
-        result_bytes = _shape_bytes(m.group("shape"))
+        result_bytes = _shape_bytes(shape)
         g, _kind = _group_info(line)
         stats.add(op, g, result_bytes)
     return stats

@@ -777,7 +777,7 @@ class TrialScheduler:
         with self._log_lock:
             self._persistent[rec["key"]] = rec
             with self.cache_path.open("a") as f:
-                f.write(json.dumps(rec, default=str) + "\n")
+                f.write(jsonl_line(rec) + "\n")
 
     def _log(self, trial: Trial, tag: str, cached: bool):
         if not self.log_path:
@@ -798,7 +798,7 @@ class TrialScheduler:
         if trial.fidelity < 1.0:  # full-fidelity records keep legacy shape
             rec["fidelity"] = trial.fidelity
         with self._log_lock, self.log_path.open("a") as f:
-            f.write(json.dumps(rec, default=str) + "\n")
+            f.write(jsonl_line(rec) + "\n")
 
 
 def _scalar_info(info: Dict[str, Any]) -> Dict[str, Any]:
@@ -818,10 +818,57 @@ def call_evaluator(
     return evaluator(config)
 
 
+# Non-finite floats (an infinite-p99 window, a score=inf containment) would
+# serialize as bare ``Infinity``/``NaN`` tokens — Python extensions that are
+# NOT JSON (RFC 8259) and break any strict reader. Records are sanitized to
+# string sentinels on write and decoded back to floats in ``iter_jsonl``.
+_NONFINITE_SENTINELS = {
+    "Infinity": math.inf,
+    "-Infinity": -math.inf,
+    "NaN": math.nan,
+}
+
+
+def sanitize_nonfinite(obj: Any) -> Any:
+    """Deep-copy ``obj`` with every non-finite float replaced by its string
+    sentinel (``"Infinity"``/``"-Infinity"``/``"NaN"``)."""
+    if isinstance(obj, float) and not math.isfinite(obj):
+        if math.isnan(obj):
+            return "NaN"
+        return "Infinity" if obj > 0 else "-Infinity"
+    if isinstance(obj, dict):
+        return {k: sanitize_nonfinite(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [sanitize_nonfinite(v) for v in obj]
+    return obj
+
+
+def restore_nonfinite(obj: Any) -> Any:
+    """Inverse of :func:`sanitize_nonfinite`: exact sentinel strings become
+    the non-finite floats they stand for."""
+    if isinstance(obj, str):
+        return _NONFINITE_SENTINELS.get(obj, obj)
+    if isinstance(obj, dict):
+        return {k: restore_nonfinite(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [restore_nonfinite(v) for v in obj]
+    return obj
+
+
+def jsonl_line(rec: Dict[str, Any]) -> str:
+    """One strictly-RFC-8259 JSONL line for ``rec`` (no trailing newline):
+    non-finite floats sanitized to sentinels, everything non-JSON stringified.
+    ``allow_nan=False`` makes any unsanitized leak a hard error here, at the
+    writer, instead of a corrupt line some later reader chokes on."""
+    return json.dumps(sanitize_nonfinite(rec), default=str, allow_nan=False)
+
+
 def iter_jsonl(path: Path) -> List[Dict[str, Any]]:
     """Parse a JSONL records file, tolerating the torn tail line a crashed
     session can leave behind — the one parser under the eval cache, the trial
-    log, and the Study accessors."""
+    log, and the Study accessors. Non-finite sentinel strings written by
+    :func:`jsonl_line` (and the bare ``Infinity``/``NaN`` tokens of records
+    written before it existed) decode back to their floats."""
     out: List[Dict[str, Any]] = []
     path = Path(path)
     if not path.exists():
@@ -830,7 +877,7 @@ def iter_jsonl(path: Path) -> List[Dict[str, Any]]:
         if not line.strip():
             continue
         try:
-            out.append(json.loads(line))
+            out.append(restore_nonfinite(json.loads(line)))
         except json.JSONDecodeError:
             continue  # torn tail write from a crashed session
     return out

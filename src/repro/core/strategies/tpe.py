@@ -46,6 +46,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 from repro.core.scheduler import Trial, config_key
 from repro.core.space import CatParam, Param, TunableSpace
 from repro.core.strategies.base import QueueStrategy, register_strategy
+from repro.core.surrogate import SURROGATE_MODES, CostSurrogate
 
 _SQRT_2PI = math.sqrt(2.0 * math.pi)
 
@@ -62,6 +63,8 @@ class TPEResult:
     stopped_early: bool = False
     transfer_mode: str = "off"  # off | warm | prior (cross-cell siblings)
     sibling_observations: int = 0  # prior points ingested — NEVER budget-charged
+    surrogate: str = "off"  # off | rank (learned cost pre-ranking)
+    surrogate_rows: int = 0  # training rows at the last fit — NEVER budget-charged
 
 
 # ------------------------------------------------------------- kernel densities
@@ -208,10 +211,21 @@ class TPEStrategy(QueueStrategy):
                      pure local TPE, so a misleading sibling (the outlier
                      cell) costs a bounded number of early proposals, never
                      the whole budget
+      surrogate      ``"rank"`` pre-ranks each model round's proposals with a
+                     :class:`~repro.core.surrogate.CostSurrogate` trained on
+                     the observations (local + sibling namespaces): the round
+                     over-samples ``surrogate_oversample``× lie-conditioned
+                     proposals and keeps the predicted-fastest ``round_size``.
+                     Startup coverage, budget accounting and cache identity
+                     are untouched — ranking only reorders within a round
+      surrogate_oversample  acquisition over-sampling factor under ``rank``
+      platform       this cell's cache namespace — the surrogate's local
+                     training rows and prediction context are keyed by it
     """
 
     supports_history = True  # Study/tuner feed the persistent eval cache in
     supports_transfer = True  # on_study_attach takes the siblings= channel
+    supports_surrogate = True  # EngineConfig.surrogate plumbs to surrogate=
     transfer_modes = ("warm", "prior")
     budget_kwarg = "max_trials"  # Study.optimize(budget=N) maps here
 
@@ -230,10 +244,21 @@ class TPEStrategy(QueueStrategy):
         history: Optional[Sequence[Tuple[Dict[str, Any], float]]] = None,
         transfer_weight: float = 1.0,
         transfer_ramp: Optional[int] = None,
+        surrogate: str = "off",
+        surrogate_oversample: int = 3,
+        platform: Optional[str] = None,
     ):
         super().__init__()
         import random
 
+        if surrogate not in SURROGATE_MODES:
+            raise ValueError(
+                f"surrogate must be one of {SURROGATE_MODES}, got {surrogate!r}"
+            )
+        self.surrogate = surrogate
+        self.surrogate_oversample = max(1, int(surrogate_oversample))
+        self.platform = platform or ""
+        self.surrogate_rows = 0  # rows at the last fit (telemetry only)
         self.space = space
         self.fixed = dict(fixed or {})
         self.max_trials = int(max_trials)
@@ -270,6 +295,9 @@ class TPEStrategy(QueueStrategy):
         # warm mode: sibling incumbents snapped into this space, closest
         # sibling first — consumed as the first startup proposals
         self._seed_configs: List[Dict[str, Any]] = []
+        # surrogate training rows donated by siblings: (config, time_s,
+        # namespace) — flows even with transfer="off" (model-form transfer)
+        self._surrogate_sibling_rows: List[Tuple[Dict[str, Any], float, str]] = []
 
         self.tag = "tpe/startup"
         self.on_study_attach(history or ())
@@ -311,6 +339,7 @@ class TPEStrategy(QueueStrategy):
         self.warm_started = len(self._observations)
         if siblings is not None:
             self._ingest_siblings(siblings, transfer)
+            self._ingest_surrogate_rows(siblings)
         self.rng = random.Random(self._seed)
         self._finished = False
         self._pending = []
@@ -345,6 +374,22 @@ class TPEStrategy(QueueStrategy):
                 if key not in seed_seen:
                     seed_seen.add(key)
                     self._seed_configs.append(dict(inc))
+
+    def _ingest_surrogate_rows(self, siblings) -> None:
+        """Sibling trials as surrogate training rows, kept separate from the
+        Parzen densities: the surrogate channel is live whenever
+        ``surrogate != off`` — including ``transfer="off"`` — because the
+        per-namespace intercept makes foreign scales safe for the *model*
+        where they are unsafe for the density split."""
+        self._surrogate_sibling_rows = []
+        if self.surrogate == "off":
+            return
+        for sib in siblings:
+            for entry in sib.trials:
+                full = self._canon(entry[0])
+                t = float(entry[1])
+                if full is not None and math.isfinite(t) and t > 0.0:
+                    self._surrogate_sibling_rows.append((full, t, sib.namespace))
 
     @property
     def sibling_observations(self) -> int:
@@ -453,13 +498,38 @@ class TPEStrategy(QueueStrategy):
             [(c, w) for c, _, w in ranked[n_good:]],
         )
 
+    def _fit_surrogate(self) -> Optional[CostSurrogate]:
+        """Fresh fit over (local observations + sibling rows); None when the
+        surrogate is off or under-trained. Refit every round — the training
+        set is a deterministic function of (observations, siblings), which
+        keeps the proposal stream replayable."""
+        if self.surrogate == "off":
+            return None
+        rows = [
+            (c, t, self.platform)
+            for c, t in self._observations
+            if math.isfinite(t) and t > 0.0
+        ] + self._surrogate_sibling_rows
+        model = CostSurrogate(self.space).fit(rows)
+        self.surrogate_rows = model.n_rows
+        return model if model.ready else None
+
     def _propose_round(self, k: int) -> List[Dict[str, Any]]:
         """k EI-ranked proposals; each one conditions the next via a constant
         lie at the worst observed objective (in-flight configs fall into the
         bad density, so l/g repels repeats — batch diversity). Sibling prior
         points join the good/bad densities with their distance-decayed
         weights but are split by their OWN cell's quantile, never ranked
-        against local times."""
+        against local times.
+
+        Under ``surrogate="rank"`` the round generates ``k × oversample``
+        lie-conditioned proposals and returns the ``k`` the cost model
+        predicts fastest (stable order) — the predicted frontier. Only those
+        k are ever proposed, so budget accounting and cache identity are
+        byte-identical to ``off``; the surviving set is a pure function of
+        (seed, observations, siblings, training set)."""
+        model = self._fit_surrogate()
+        n = k if model is None else k * self.surrogate_oversample
         lie = self._worst_finite()
         lies: List[Tuple[Dict[str, Any], float]] = []
         seen = {config_key(c) for c, _ in self._observations}
@@ -472,7 +542,7 @@ class TPEStrategy(QueueStrategy):
         )
         sib_good = [(c, w * fade) for c, w in self._sibling_good if w * fade > 0]
         sib_bad = [(c, w * fade) for c, w in self._sibling_bad if w * fade > 0]
-        for _ in range(k):
+        for _ in range(n):
             local = [(c, t, 1.0) for c, t in self._observations] + \
                     [(c, t, 1.0) for c, t in lies]
             good, bad = self._split(local)
@@ -480,6 +550,8 @@ class TPEStrategy(QueueStrategy):
             seen.add(config_key(cfg))
             lies.append((cfg, lie))
             out.append(cfg)
+        if model is not None and len(out) > k:
+            out = model.rank(out, self.platform)[:k]
         return out
 
     def _sample_ei(self, good, bad, seen) -> Dict[str, Any]:
@@ -516,4 +588,6 @@ class TPEStrategy(QueueStrategy):
             warm_started=self.warm_started,
             transfer_mode=self.transfer_mode,
             sibling_observations=self.sibling_observations,
+            surrogate=self.surrogate,
+            surrogate_rows=self.surrogate_rows,
         )

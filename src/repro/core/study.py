@@ -38,6 +38,7 @@ from typing import Any, Dict, List, Optional, Sequence
 from repro.core.scheduler import (
     TrialScheduler,
     iter_jsonl,
+    jsonl_line,
     read_cache_by_platform,
     read_log,
 )
@@ -80,6 +81,12 @@ class EngineConfig:
                     rejects provably-doomed configs (clamp aliases, VMEM/HBM
                     overflow) as ``infeasible_static`` records without
                     charging a worker; ``"off"`` (default) runs everything
+    ``surrogate``   learned cost model over the study cache: ``"rank"``
+                    pre-ranks a surrogate-capable strategy's acquisition
+                    candidates at the predicted frontier (TPE over-samples,
+                    the :class:`~repro.core.surrogate.CostSurrogate` keeps
+                    the predicted-fastest); ``"off"`` (default) disables it.
+                    Strategies without ``supports_surrogate`` ignore it
     """
 
     workers: int = 1
@@ -91,6 +98,7 @@ class EngineConfig:
     clear_caches: bool = False
     pin_devices: Optional[int] = None
     prefilter: str = "off"
+    surrogate: str = "off"
 
     def __post_init__(self):
         if int(self.workers) < 1:
@@ -132,6 +140,13 @@ class EngineConfig:
             raise ValueError(
                 f"EngineConfig.prefilter must be one of {PREFILTER_MODES}, "
                 f"got {self.prefilter!r}"
+            )
+        from repro.core.surrogate import SURROGATE_MODES
+
+        if self.surrogate not in SURROGATE_MODES:
+            raise ValueError(
+                f"EngineConfig.surrogate must be one of {SURROGATE_MODES}, "
+                f"got {self.surrogate!r}"
             )
 
     def scheduler_kwargs(self) -> Dict[str, Any]:
@@ -268,6 +283,13 @@ def run_session(
     uses_hook = hook is not None and hook is not QueueStrategy.on_study_attach
     if attach_history and not uses_hook:
         algo_kwargs["history"] = history
+    # a surrogate-enabled strategy predicts in this cell's namespace: the
+    # session's platform is its context unless the caller pinned one
+    if (
+        getattr(factory, "supports_surrogate", False)
+        and str(algo_kwargs.get("surrogate", "off")) != "off"
+    ):
+        algo_kwargs.setdefault("platform", platform)
 
     before = scheduler.stats_snapshot()
     defaults = {**space.defaults(), **(fixed or {})}
@@ -285,10 +307,16 @@ def run_session(
     if algorithm in ("gsft", "grid"):
         algo_kwargs.setdefault("active_params", active_params)
     strategy = make_strategy(algorithm, space, fixed=fixed, **algo_kwargs)
-    if uses_hook and (attach_history or has_transfer):
+    # the surrogate's training channel: sibling histories flow to a
+    # surrogate-enabled strategy even with transfer="off" — the cost model
+    # (not the Parzen prior) is what consumes them there
+    has_surrogate = (
+        bool(siblings) and getattr(strategy, "surrogate", "off") != "off"
+    )
+    if uses_hook and (attach_history or has_transfer or has_surrogate):
         transfer_kwargs = (
             {"siblings": list(siblings), "transfer": transfer}
-            if has_transfer else {}
+            if (has_transfer or has_surrogate) else {}
         )
         strategy.on_study_attach(
             history if attach_history else (), **transfer_kwargs
@@ -650,10 +678,23 @@ class Study:
                 # strategy actually implements, and record THAT — provenance
                 # must never claim a prior that was really warm seeding
                 transfer = modes[-1] if "warm" not in modes else "warm"
-            if siblings is None:  # resume passes the recorded set instead
-                siblings = self.histories_for(platform, similarity=similarity)
-        else:
+        # the learned cost surrogate: plumb EngineConfig.surrogate (or an
+        # explicit surrogate= strategy kwarg) into surrogate-capable
+        # strategies, with the cell namespace as prediction context. Its
+        # training set rides the sibling channel even when the Parzen
+        # transfer prior is off — cross-study transfer in model form
+        wants_surrogate = (
+            getattr(factory, "supports_surrogate", False)
+            and str(algo_kwargs.get("surrogate", eng.surrogate)) != "off"
+        )
+        if wants_surrogate:
+            # run_session injects the namespace (its ``platform`` argument)
+            # as the strategy's prediction context; only the mode rides here
+            algo_kwargs.setdefault("surrogate", eng.surrogate)
+        if transfer == "off" and not wants_surrogate:
             siblings = None
+        elif siblings is None:  # resume passes the recorded set instead
+            siblings = self.histories_for(platform, similarity=similarity)
         if budget is not None:
             budget_kwarg = getattr(factory, "budget_kwarg", None)
             if not budget_kwarg:
@@ -696,10 +737,12 @@ class Study:
             "log_path": str(scheduler.log_path) if scheduler.log_path else None,
             "evaluator_spec": _spec_ref(evaluator),
         }
-        if transfer != "off":
+        if siblings is not None:
             # the exact sibling set is session provenance: resume must replay
             # THESE namespaces (and these trial-count prefixes), not whatever
-            # the cache holds by then — and must raise if one went missing
+            # the cache holds by then — and must raise if one went missing.
+            # Recorded whenever the sibling channel was open (transfer OR a
+            # surrogate training set), even when the set came up empty
             start_rec["transfer"] = {
                 "mode": transfer,
                 "siblings": [
@@ -822,7 +865,7 @@ class Study:
             return
         self.log_path.parent.mkdir(parents=True, exist_ok=True)
         with self.log_path.open("a") as f:
-            f.write(json.dumps({"ts": time.time(), **rec}, default=str) + "\n")
+            f.write(jsonl_line({"ts": time.time(), **rec}) + "\n")
 
     def resume(
         self,
@@ -902,15 +945,17 @@ class Study:
         eng = engine or EngineConfig.from_dict(rec.get("engine", {}))
         kwargs = dict(rec.get("args") or {})
         seed = kwargs.pop("seed", None)  # recorded post-injection; re-route
-        # a transfer session resumes with the SAME sibling set it started
-        # with — rebuilt from the recorded namespaces and trial-count
-        # prefixes; a sibling namespace that disappeared from the cache is a
-        # hard error, never a silent no-transfer rerun
-        stored_transfer = rec.get("transfer") or {}
-        transfer = stored_transfer.get("mode", "off")
+        # a transfer (or surrogate-training) session resumes with the SAME
+        # sibling set it started with — rebuilt from the recorded namespaces
+        # and trial-count prefixes; a sibling namespace that disappeared from
+        # the cache is a hard error, never a silent no-transfer rerun. The
+        # record's presence (not its mode) gates the rebuild: a surrogate
+        # session stores mode="off" with a live sibling list
+        stored_transfer = rec.get("transfer")
+        transfer = (stored_transfer or {}).get("mode", "off")
         siblings = (
             self._siblings_from_record(rec, stored_transfer.get("siblings") or [])
-            if transfer != "off" else None
+            if stored_transfer is not None else None
         )
         scheduler = self.scheduler(
             evaluator, platform=rec["platform"], engine=eng,
@@ -1134,6 +1179,10 @@ class Study:
             }
             if tr.get("mode", "off") != "off":
                 row["transfer_siblings"] = len(tr.get("siblings") or [])
+            srg = (rec.get("args") or {}).get("surrogate", "off")
+            if srg != "off":
+                row["surrogate"] = srg
+                row["surrogate_siblings"] = len(tr.get("siblings") or [])
             if rec.get("resumes") is not None:
                 row["resumes"] = rec["resumes"]
             if rec.get("mode", "offline") != "offline":
@@ -1182,7 +1231,7 @@ class Study:
         self._sessions.append(rec)
         if self._sessions_path is not None:
             with self._sessions_path.open("a") as f:
-                f.write(json.dumps(rec, default=str) + "\n")
+                f.write(jsonl_line(rec) + "\n")
 
     def _load_sessions(self) -> List[Dict[str, Any]]:
         if self._sessions_path is None:

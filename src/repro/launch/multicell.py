@@ -47,6 +47,7 @@ def tune_cells(
     jobs: int = 1,
     trial_timeout: float = None,
     prefilter: str = "off",
+    surrogate: str = "off",
     evaluator_factory=None,
     transfer: str = "off",
     **algo_kwargs,
@@ -72,6 +73,7 @@ def tune_cells(
             engine=EngineConfig(
                 workers=jobs, isolation=isolation, timeout_s=trial_timeout,
                 patience=patience, batch_size=batch_size, prefilter=prefilter,
+                surrogate=surrogate,
             ),
             cache_path=cache_path,
         )
@@ -85,6 +87,7 @@ def tune_cells(
                 ("batch_size", batch_size is not None),
                 ("cache_path", cache_path is not None),
                 ("prefilter", prefilter != "off"),
+                ("surrogate", surrogate != "off"),
             ) if off_default
         ]
         if ignored:
@@ -199,6 +202,9 @@ def main(argv=None):
     ap.add_argument("--isolation", default=None,
                     choices=["inline", "subprocess"],
                     help="trial execution backend (see launch/tune.py)")
+    ap.add_argument("--surrogate", default=None, choices=["off", "rank"],
+                    help="learned cost surrogate: pre-rank TPE acquisition "
+                         "at the predicted frontier (see launch/tune.py)")
     args = ap.parse_args(argv)
 
     if args.algorithm == "gsft":
@@ -238,6 +244,7 @@ def main(argv=None):
             jobs=engine.workers,
             trial_timeout=engine.timeout_s,
             prefilter=engine.prefilter,
+            surrogate=engine.surrogate,
         )
     evaluator_factory = None
     if args.evaluator_factory:

@@ -81,6 +81,12 @@ def add_engine_args(ap: argparse.ArgumentParser):
                          "rejects provably-doomed configs (clamp aliases, "
                          "VMEM/HBM overflow) as infeasible_static records "
                          "without spawning a worker (default off)")
+    ap.add_argument("--surrogate", default=None, choices=["off", "rank"],
+                    help="learned cost surrogate over the study cache: "
+                         "'rank' makes TPE over-sample acquisition "
+                         "candidates and propose only the model-predicted "
+                         "frontier, training on local + sibling-cell "
+                         "observations (default off)")
 
 
 def roofline_platform_key(platform: str, arch: str, shape: str,
@@ -103,6 +109,7 @@ def engine_overrides(args) -> dict:
         "batch": "batch_size",
         "pin_devices": "pin_devices",
         "prefilter": "prefilter",
+        "surrogate": "surrogate",
     }
     return {
         field: getattr(args, flag)

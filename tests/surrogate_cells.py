@@ -1,0 +1,105 @@
+"""Deterministic modeled cells for the surrogate CI smoke.
+
+The surrogate CI job compares ``--surrogate off`` vs ``rank`` target
+sessions by fresh-evaluations-to-incumbent — a razor-thin race near the
+optimum plateau that real walltime measurement (min-of-repeats on a shared
+runner) flips from run to run. Exactly like the transfer smoke's
+``synthetic_cells``, these evaluators replace the *measurement* with a pure
+function of the config so the comparison is exact, not statistical, while
+keeping the real cell namespaces and the real tunable spaces:
+
+  - ``wc_model_time`` is an analytic cost model of the WordCount job in
+    ``repro.apps.wordcount`` over the real ``WORDCOUNT_SPACE``: replica
+    re-reads dominate (the paper's Table IV shape), block/sort-buffer/
+    sort-factor shape the map and merge overheads, compression trades
+    shuffle bytes for combine CPU, and the paper's long-tail knobs
+    (``map_tasks_max``, ``slowstart``, ...) are exact no-ops the tuner has
+    to discover.
+  - ``ssm_model_time`` models one Pallas ``ssm_scan`` cell over the real
+    ``KERNEL_SPACES['ssm_scan']``: grid-step launch overhead vs a
+    working-set spill penalty, so the best (chunk, d_block) is interior
+    and shifts with the shape — the cross-shape structure the surrogate
+    is supposed to transfer.
+
+Everything is a pure function of its inputs — no rng, no wall clock — so
+"fewer fresh evaluations" assertions are exactly reproducible anywhere.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+from repro.apps.wordcount import VOCAB, WORDCOUNT_SPACE
+from repro.core.evaluators import FunctionEvaluator
+from repro.core.kernel_tune import (
+    KERNEL_SPACES,
+    kernel_platform_key,
+    shape_class_for,
+)
+
+# The WordCount matrix: corpus sizes per cell, as in benchmarks/tables.py.
+WC_CELLS = {"wc:1m": 1 << 20, "wc:2m": 1 << 21}
+
+
+def wc_model_time(config: Dict[str, Any], num_tokens: int) -> float:
+    """Modeled execution time of the WordCount job under ``config`` on a
+    ``num_tokens`` corpus. Coefficients are sized to the measured job
+    (~0.25 s default / ~0.09 s tuned at 2M tokens): the replication
+    re-read term dominates, everything else is second order."""
+    cfg = WORDCOUNT_SPACE.snap({**WORDCOUNT_SPACE.defaults(), **config})
+    n = float(num_tokens)
+    reps = float(cfg["replication"])
+    n_map = float(cfg["num_map_tasks"])
+    block = float(min(int(cfg["block_tokens"]), int(n / n_map)))
+    buf = float(min(int(cfg["sort_buffer_tokens"]), int(block)))
+    fan = float(cfg["sort_factor"])
+    n_red = float(cfg["num_reduces"])
+    compress = bool(cfg["map_output_compress"])
+
+    t = 4.0e-8 * reps * n                  # replica corpus re-reads
+    t += 2.0e-6 * reps * (n / block)       # per-block dispatch
+    t += 1.2e-7 * reps * (n / buf)         # sort-buffer scan segments
+    levels = math.ceil(math.log(max(n_map, 2.0)) / math.log(max(fan, 2.0)))
+    t += 4.0e-9 * reps * levels * VOCAB * n_map   # tree-merge traffic
+    shuffle = n_map * VOCAB * (2.0 if compress else 4.0)
+    t += 3.0e-9 * reps * shuffle           # shuffle payload
+    if compress:
+        t += 2.5e-8 * reps * n_map * VOCAB  # map-side combine CPU
+    t += 1.5e-3 * (n_red - 1.0)            # extra reducers on one host
+    return t
+
+
+def make_wc_evaluator(num_tokens: int) -> FunctionEvaluator:
+    return FunctionEvaluator(fn=lambda cfg: wc_model_time(cfg, num_tokens))
+
+
+def ssm_model_time(config: Dict[str, Any], shape: Tuple[int, ...]) -> float:
+    """Modeled time of one ``ssm_scan`` launch at block config ``config``
+    on ``shape`` = (batch, seq, d_inner, state): fixed per-grid-step launch
+    overhead pulls toward big blocks, a working-set spill penalty pushes
+    back, so the optimum is interior and shape-dependent."""
+    b, s, d_inner, n = (float(x) for x in shape)
+    cfg = KERNEL_SPACES["ssm_scan"].snap(
+        {**KERNEL_SPACES["ssm_scan"].defaults(), **config}
+    )
+    chunk = float(min(int(cfg["chunk"]), int(s)))
+    d_block = float(min(int(cfg["d_block"]), int(d_inner)))
+    steps = math.ceil(s / chunk) * math.ceil(d_inner / d_block)
+    t = 8.0e-6 * steps                     # per-step launch overhead
+    t += 1.0e-9 * b * s * d_inner * n      # the scan work itself
+    # padding waste when d_block does not divide d_inner
+    t *= (math.ceil(d_inner / d_block) * d_block) / d_inner
+    vmem = chunk * d_block * (n + 2.0) * 4.0
+    if vmem > 65536.0:                     # working set spills: VMEM-shaped
+        t *= 1.0 + 0.35 * math.log2(vmem / 65536.0)
+    return t
+
+
+def ssm_namespace(shape: Tuple[int, ...], dtype: str = "f32") -> str:
+    return kernel_platform_key(
+        "ssm_scan", dtype, shape_class_for("ssm_scan", shape)
+    )
+
+
+def make_ssm_evaluator(shape: Tuple[int, ...]) -> FunctionEvaluator:
+    return FunctionEvaluator(fn=lambda cfg: ssm_model_time(cfg, shape))

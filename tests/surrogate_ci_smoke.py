@@ -1,0 +1,120 @@
+"""Surrogate CI smoke — the acceptance claim, asserted from journaled records.
+
+From the checked-in donor study (``results/studies/surrogate_donor``: a deep
+TPE sweep on the WordCount wc:1m cell plus one ssm_scan kernel cell), run
+``--surrogate off`` vs ``rank`` target sessions at equal budget and seed on
+a sibling cell of each family, and assert via each run's ``trials.jsonl``
+that rank reaches the off control's incumbent (within 2%) in strictly fewer
+fresh evaluations.
+
+The cells are the deterministic modeled ones from ``surrogate_cells`` (pure
+functions, no walltime), so the comparison is exact, not statistical — the
+same design as the transfer CI smoke. The donor cells never re-run: the
+surrogate trains on them through ``Study.histories_for`` sibling delivery,
+which is also what this smoke regression-tests.
+
+    PYTHONPATH=src:tests python tests/surrogate_ci_smoke.py [workdir]
+    PYTHONPATH=src:tests python tests/surrogate_ci_smoke.py --regen-donor
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import sys
+from pathlib import Path
+
+from surrogate_cells import (
+    WC_CELLS,
+    make_ssm_evaluator,
+    make_wc_evaluator,
+    ssm_namespace,
+)
+
+from repro.core import Study
+from repro.core.kernel_tune import KERNEL_SPACES, kernel_similarity
+
+DONOR = Path("results/studies/surrogate_donor")
+
+
+def evals_to(trials_path: Path, namespace: str, incumbent: float):
+    """1-based index of the first fresh ok trial in ``namespace`` at or
+    under ``incumbent``, or None — read from the journal, not the summary."""
+    fresh = 0
+    for line in open(trials_path):
+        rec = json.loads(line)
+        if rec.get("platform") != namespace or rec.get("status") != "ok":
+            continue
+        if rec.get("cached") or rec.get("source") != "fresh":
+            continue
+        fresh += 1
+        t = rec.get("time_s")
+        if isinstance(t, (int, float)) and t <= incumbent:
+            return fresh
+    return None
+
+
+def run_cell(work: Path, tag: str, namespace: str, budget: int, seed: int,
+             make_ev, space=None, similarity=None) -> None:
+    out = {}
+    for mode in ("off", "rank"):
+        d = work / f"{tag}_{mode}"
+        if d.exists():
+            shutil.rmtree(d)
+        d.parent.mkdir(parents=True, exist_ok=True)
+        shutil.copytree(DONOR, d)
+        study = Study.load(d)
+        kwargs = dict(budget=budget, seed=seed, n_startup=4,
+                      engine=study.engine.replace(surrogate=mode))
+        if space is not None:
+            kwargs["space"] = space
+        if similarity is not None:
+            kwargs["similarity"] = similarity
+        res = study.optimize(namespace, "tpe", make_ev(), **kwargs)
+        out[mode] = (d / "trials.jsonl", res.best_time)
+
+    (off_path, off_best), (rank_path, _) = out["off"], out["rank"]
+    incumbent = off_best * 1.02
+    off_at = evals_to(off_path, namespace, incumbent)
+    rank_at = evals_to(rank_path, namespace, incumbent)
+    print(f"{tag}: off incumbent {off_best:.6g} reached@{off_at}, "
+          f"rank reached@{rank_at}")
+    assert off_at is not None, f"{tag}: off never reached its own incumbent"
+    assert rank_at is not None, f"{tag}: rank never reached off incumbent+2%"
+    assert rank_at < off_at, (
+        f"{tag}: rank needed {rank_at} fresh evals vs off {off_at} — "
+        f"surrogate pre-ranking did not help")
+
+
+def regen_donor() -> None:
+    """Rebuild the checked-in donor study. The evaluators are deterministic,
+    so regeneration reproduces the same trials (timestamps aside)."""
+    shutil.rmtree(DONOR, ignore_errors=True)
+    study = Study.create(DONOR)
+    study.optimize("wordcount/wc:1m", "tpe",
+                   make_wc_evaluator(WC_CELLS["wc:1m"]), budget=48, seed=3)
+    study.optimize(ssm_namespace((2, 128, 64, 8)), "tpe",
+                   make_ssm_evaluator((2, 128, 64, 8)),
+                   space=KERNEL_SPACES["ssm_scan"], budget=20, seed=0,
+                   similarity=kernel_similarity)
+    print(f"donor study rebuilt at {DONOR}")
+
+
+def main() -> int:
+    if "--regen-donor" in sys.argv:
+        regen_donor()
+        return 0
+    work = Path(sys.argv[1]) if len(sys.argv) > 1 else Path("results/ci_surrogate")
+    # WordCount matrix: donor wc:1m, target the wc:2m sibling (2x corpus)
+    run_cell(work, "wc", "wordcount/wc:2m", budget=24, seed=5,
+             make_ev=lambda: make_wc_evaluator(WC_CELLS["wc:2m"]))
+    # kernel cell: donor ssm_scan b2s128di64n8, target the b1s256di64n16
+    # sibling shape — sibling delivery rides kernel_similarity
+    run_cell(work, "kern", ssm_namespace((1, 256, 64, 16)), budget=12, seed=5,
+             make_ev=lambda: make_ssm_evaluator((1, 256, 64, 16)),
+             space=KERNEL_SPACES["ssm_scan"], similarity=kernel_similarity)
+    print("surrogate CI smoke OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -161,3 +161,47 @@ def test_parse_memory_monotone_in_input_size():
     small = aot_memory_estimate(f, np.zeros((16, 16), np.float32))
     big = aot_memory_estimate(f, np.zeros((128, 128), np.float32))
     assert big.peak_bytes > small.peak_bytes
+
+
+# ------------------------------------------------- async start/done pairs
+
+
+def test_async_pair_counts_once_with_sync_bytes():
+    # an async all-gather is a start/done pair; the -start's printed shape
+    # is the tuple (operand, result) — the pair must contribute exactly the
+    # sync op's count and wire bytes, not operand+result and not 2 ops
+    sync = (
+        "  ag.1 = f32[256,64]{1,0} all-gather(p.0), dimensions={0}, "
+        "replica_groups=[2,4]<=[8]\n"
+    )
+    async_pair = "\n".join([
+        "  ag-start.1 = (f32[64,64], f32[256,64]) all-gather-start(p.0), "
+        "dimensions={0}, replica_groups=[2,4]<=[8]",
+        "  ag-done.1 = f32[256,64]{1,0} all-gather-done(ag-start.1)",
+        "",
+    ])
+    s_sync = parse_collectives(sync)
+    s_async = parse_collectives(async_pair)
+    assert s_sync.count == 1
+    assert s_async.count == 1
+    assert s_async.wire_bytes == s_sync.wire_bytes > 0
+    assert dict(s_async.by_op) == dict(s_sync.by_op)
+
+
+def test_async_allreduce_plain_start_shape():
+    # all-reduce-start prints a plain array shape (result == operand); the
+    # done line must still be skipped rather than double-counted
+    sync = (
+        "  ar.1 = f32[128]{0} all-reduce(p.0), to_apply=add, "
+        "replica_groups=[1,8]<=[8]\n"
+    )
+    async_pair = "\n".join([
+        "  ar-start.1 = f32[128]{0} all-reduce-start(p.0), to_apply=add, "
+        "replica_groups=[1,8]<=[8]",
+        "  ar-done.1 = f32[128]{0} all-reduce-done(ar-start.1)",
+        "",
+    ])
+    s_sync = parse_collectives(sync)
+    s_async = parse_collectives(async_pair)
+    assert s_async.count == s_sync.count == 1
+    assert s_async.wire_bytes == s_sync.wire_bytes > 0

@@ -1,0 +1,88 @@
+"""RFC 8259 strictness of the JSONL persistence layer: Python's ``json``
+serializes ``inf``/``nan`` floats as bare ``Infinity``/``NaN`` tokens that
+only round-trip because ``json.loads`` is lenient. The writers sanitize
+non-finite floats to string sentinels (``jsonl_line``) and ``iter_jsonl``
+restores them — so every persisted line parses under a strict RFC parser
+(the regression: PR 9's infinite-p99 windows and score=inf records)."""
+import json
+import math
+
+import pytest
+
+from repro.core.evaluators import FunctionEvaluator
+from repro.core.scheduler import (
+    TrialScheduler,
+    iter_jsonl,
+    jsonl_line,
+    restore_nonfinite,
+    sanitize_nonfinite,
+)
+
+
+def _strict_loads(line):
+    def _reject(token):
+        raise ValueError(f"non-RFC constant {token!r}")
+
+    return json.loads(line, parse_constant=_reject)
+
+
+def test_infinite_time_survives_strict_round_trip(tmp_path):
+    rec = {
+        "config": {"a": 1},
+        "time_s": float("inf"),
+        "nested": {"p99": float("-inf"), "vals": [1.0, float("nan")]},
+    }
+    line = jsonl_line(rec)
+    parsed = _strict_loads(line)  # raises if any bare Infinity/NaN leaked
+    restored = restore_nonfinite(parsed)
+    assert restored["time_s"] == math.inf
+    assert restored["nested"]["p99"] == -math.inf
+    assert math.isnan(restored["nested"]["vals"][1])
+    # and through the file-level reader
+    path = tmp_path / "cache.jsonl"
+    path.write_text(line + "\n")
+    [row] = iter_jsonl(path)
+    assert row["time_s"] == math.inf
+
+
+def test_sentinel_strings_round_trip_as_floats_not_strings():
+    assert sanitize_nonfinite(float("inf")) == "Infinity"
+    assert sanitize_nonfinite(float("-inf")) == "-Infinity"
+    assert sanitize_nonfinite(float("nan")) == "NaN"
+    # tuples sanitize like lists (JSON has no tuple)
+    assert sanitize_nonfinite((1.0, float("inf"))) == [1.0, "Infinity"]
+    # restore is exactly inverse on the sentinels, identity elsewhere
+    assert restore_nonfinite("Infinity") == math.inf
+    assert restore_nonfinite("Infinityy") == "Infinityy"
+    assert restore_nonfinite({"x": ["NaN"]})["x"][0] != restore_nonfinite("x")
+
+
+def test_legacy_bare_infinity_lines_still_decode(tmp_path):
+    # records written before the sanitizer carry bare tokens; the lenient
+    # stdlib parse inside iter_jsonl must keep accepting them
+    path = tmp_path / "legacy.jsonl"
+    path.write_text('{"time_s": Infinity, "score": NaN}\n')
+    [row] = iter_jsonl(path)
+    assert row["time_s"] == math.inf
+    assert math.isnan(row["score"])
+
+
+def test_scheduler_cache_lines_are_strict_json(tmp_path):
+    # end to end: a trial whose measurement comes back infinite must land in
+    # cache.jsonl and the trial log as strict-parseable lines
+    cache = tmp_path / "cache.jsonl"
+    log = tmp_path / "log.jsonl"
+    sched = TrialScheduler(
+        FunctionEvaluator(lambda c: float("inf")),
+        cache_path=cache, log_path=log,
+    )
+    sched.evaluate({"mesh_model_parallel": 8}, tag="t")
+    sched.close()
+    for path in (cache, log):
+        lines = [l for l in path.read_text().splitlines() if l.strip()]
+        assert lines
+        for line in lines:
+            _strict_loads(line)
+    # and the warm-start reader hands the inf back as a float
+    rows = iter_jsonl(cache)
+    assert any(r.get("time_s") == math.inf for r in rows)

@@ -1,0 +1,284 @@
+"""Learned cost surrogate (repro.core.surrogate) invariants.
+
+Model-level: deterministic ridge fit, log2/one-hot encoding, per-namespace
+intercepts absorbing sibling scale offsets, under-trained fallback.
+
+Strategy-level (mirroring the PR 5 transfer purity suite): under
+``surrogate="rank"`` the TPE proposal stream stays a pure function of
+(seed, observations, siblings, training set); pre-ranking only *reorders*
+candidates within a round; random startup coverage is untouched; training
+never charges budget.
+
+Study-level: ``EngineConfig.surrogate`` plumbs through ``optimize``, the
+sibling training set is recorded as session provenance even with
+``transfer="off"``, replay over a complete cache pays zero fresh
+evaluations, and resume reuses the recorded sibling set.
+"""
+import math
+
+import pytest
+
+from repro.core import (
+    TRAIN_SPACE,
+    EngineConfig,
+    SiblingHistory,
+    Study,
+    config_key,
+)
+from repro.core.scheduler import Trial
+from repro.core.strategies.tpe import TPEStrategy
+from repro.core.surrogate import (
+    SURROGATE_MODES,
+    CostSurrogate,
+    cell_features,
+    encode_config,
+)
+
+from synthetic_cells import (
+    SyntheticCellEvaluator,
+    base_for,
+    cell_time,
+    target_for,
+)
+
+CELL_A = "train/cellA:train_4k"
+CELL_B = "train/cellB:train_4k"
+
+
+def _rows(arch, n=32, seed=9, namespace=CELL_A):
+    """Deterministic (config, time, namespace) training rows for one cell."""
+    import random
+
+    rng = random.Random(seed)
+    out = []
+    for _ in range(n):
+        cfg = {p.name: p.sample(rng) for p in TRAIN_SPACE.params}
+        t = cell_time(cfg, target=target_for(arch), base=base_for(arch))
+        out.append((cfg, t, namespace))
+    return out
+
+
+def _siblings(rows):
+    return [SiblingHistory(rows[0][2], 0.5,
+                           tuple((c, t, "tpe/round1") for c, t, _ in rows))]
+
+
+def _drive(strategy, objective, batch=None, limit=200):
+    stream = []
+    while not strategy.done and len(stream) < limit:
+        configs = strategy.ask(batch)
+        if not configs:
+            break
+        stream += [config_key(c) for c in configs]
+        strategy.tell([Trial(dict(c), objective(c)) for c in configs])
+    return stream
+
+
+def _objective(arch):
+    return lambda c: cell_time(c, target=target_for(arch),
+                               base=base_for(arch))
+
+
+# ------------------------------------------------------------- model itself
+
+
+def test_encode_config_log2_and_onehot():
+    cfg = dict(TRAIN_SPACE.defaults())
+    cfg["mesh_model_parallel"] = 16  # pow2 knob -> log2 space
+    cfg["remat_policy"] = "dots"     # categorical -> one-hot
+    feats = encode_config(TRAIN_SPACE, cfg)
+    assert feats["cfg:mesh_model_parallel"] == 4.0
+    assert feats["cfg:remat_policy='dots'"] == 1.0
+    assert "cfg:remat_policy='full'" not in feats
+    # a partial config falls back to space defaults rather than KeyError
+    partial = encode_config(TRAIN_SPACE, {"mesh_model_parallel": 8})
+    assert partial["cfg:mesh_model_parallel"] == 3.0
+
+
+def test_cell_features_geometry():
+    feats = cell_features("train/cellA:train_4k@512c")
+    assert feats["geo:log2_chips"] == 9.0
+    assert feats["geo:log2_seq"] == 12.0  # train_4k: seq_len 4096
+    assert feats["geo:log2_batch"] == 8.0  # global_batch 256
+    assert feats["geo:kind=train"] == 1.0
+    # unknown shape: topology only (the ns intercept carries the rest)
+    bare = cell_features("wordcount/wc:1m")
+    assert set(bare) == {"geo:log2_chips"}
+
+
+def test_under_trained_model_falls_back():
+    rows = _rows("cellA", n=4)
+    m = CostSurrogate(TRAIN_SPACE).fit(rows)
+    assert not m.ready
+    cand = [r[0] for r in _rows("cellA", n=6, seed=11)]
+    assert m.rank(cand) == cand  # identity: no reordering on noise
+    with pytest.raises(RuntimeError):
+        m.predict(cand[0])
+
+
+def test_fit_is_deterministic_and_ranks_toward_optimum():
+    rows = _rows("cellA", n=48)
+    m1 = CostSurrogate(TRAIN_SPACE).fit(rows)
+    m2 = CostSurrogate(TRAIN_SPACE).fit(list(rows))
+    assert m1.ready and m1.n_rows == 48
+    cand = [r[0] for r in _rows("cellA", n=24, seed=17)]
+    assert [m1.predict(c, CELL_A) for c in cand] == \
+        [m2.predict(c, CELL_A) for c in cand]
+    ranked = m1.rank(cand, CELL_A)
+    truth = sorted(cand, key=_objective("cellA"))
+    # the model's top pick is in the true top quartile of the candidates
+    true_order = [config_key(c) for c in truth]
+    assert true_order.index(config_key(ranked[0])) < len(cand) // 4
+
+
+def test_namespace_intercept_absorbs_sibling_scale():
+    # same config-effect structure, 2x absolute scale in the sibling cell:
+    # training on both must not corrupt the local ranking
+    local = _rows("cellB", n=24, namespace=CELL_B)
+    sib = [(c, 2.0 * t, CELL_A) for c, t, _ in _rows("cellB", n=24, seed=3)]
+    m = CostSurrogate(TRAIN_SPACE).fit(local + sib)
+    cand = [r[0] for r in _rows("cellB", n=24, seed=21)]
+    ranked = m.rank(cand, CELL_B)
+    truth = sorted(cand, key=_objective("cellB"))
+    assert config_key(ranked[0]) in {config_key(c) for c in truth[:6]}
+    # and the intercept shows up as a roughly-constant per-cell offset
+    deltas = [m.predict(c, CELL_A) - m.predict(c, CELL_B) for c in cand[:8]]
+    assert max(deltas) - min(deltas) < 1e-9  # exactly the intercept gap
+
+
+def test_invalid_modes_raise():
+    with pytest.raises(ValueError, match="surrogate"):
+        TPEStrategy(TRAIN_SPACE, surrogate="bogus")
+    with pytest.raises(ValueError, match="surrogate"):
+        EngineConfig(surrogate="bogus")
+    assert SURROGATE_MODES == ("off", "rank")
+
+
+# -------------------------------------------------------- strategy purity
+
+
+def test_proposal_stream_pure_function_with_surrogate_rank():
+    sibs = _siblings(_rows("cellA", n=24))
+    objective = _objective("cellB")
+
+    def fresh(seed):
+        s = TPEStrategy(TRAIN_SPACE, max_trials=16, seed=seed,
+                        surrogate="rank", platform=CELL_B)
+        s.on_study_attach((), siblings=sibs, transfer="off")
+        return s
+
+    # same (seed, siblings/training set) -> byte-identical stream
+    assert _drive(fresh(7), objective) == _drive(fresh(7), objective)
+    # batch size changes scheduling, not the proposed set (round batching)
+    assert set(_drive(fresh(7), objective, batch=1)) == \
+        set(_drive(fresh(7), objective, batch=5))
+    # the training set is part of the function's domain: drop it, stream moves
+    bare = TPEStrategy(TRAIN_SPACE, max_trials=16, seed=7,
+                       surrogate="rank", platform=CELL_B)
+    assert _drive(bare, objective) != _drive(fresh(7), objective)
+    # and a different seed moves it too
+    assert _drive(fresh(8), objective) != _drive(fresh(7), objective)
+
+
+def test_rank_only_reorders_candidates(monkeypatch):
+    """Every surrogate call permutes the oversampled candidate list — it
+    never invents or drops configs; the round keeps a prefix of the ranked
+    permutation."""
+    calls = []
+    orig = CostSurrogate.rank
+
+    def spy(self, configs, namespace=""):
+        out = orig(self, configs, namespace)
+        calls.append(([config_key(c) for c in configs],
+                      [config_key(c) for c in out]))
+        return out
+
+    monkeypatch.setattr(CostSurrogate, "rank", spy)
+    sibs = _siblings(_rows("cellA", n=24))
+    s = TPEStrategy(TRAIN_SPACE, max_trials=16, seed=7,
+                    surrogate="rank", platform=CELL_B)
+    s.on_study_attach((), siblings=sibs, transfer="off")
+    _drive(s, _objective("cellB"))
+    assert calls  # model rounds actually ranked
+    for cand, ranked in calls:
+        assert sorted(cand) == sorted(ranked)  # a permutation, nothing else
+        assert len(set(cand)) == len(cand)
+
+
+def test_startup_coverage_and_budget_match_surrogate_off():
+    """Rank mode must not eat the n_startup random coverage (the surrogate
+    only touches model rounds) and must spend exactly the same budget —
+    training is free."""
+    sibs = _siblings(_rows("cellA", n=24))
+    objective = _objective("cellB")
+
+    def run(mode):
+        s = TPEStrategy(TRAIN_SPACE, max_trials=16, seed=7,
+                        surrogate=mode, platform=CELL_B)
+        s.on_study_attach((), siblings=sibs, transfer="off")
+        return _drive(s, objective), s
+
+    stream_rank, s_rank = run("rank")
+    stream_off, s_off = run("off")
+    n_startup = s_off.n_startup
+    # with transfer off, sibling rows feed ONLY the surrogate: the random
+    # startup prefix is identical between modes (same seed, same rng path)
+    assert stream_rank[:n_startup] == stream_off[:n_startup]
+    # equal budget, equal proposals, training never charged
+    assert len(stream_rank) == len(stream_off) == 16
+    assert s_rank._paid == s_off._paid == 16
+    assert s_rank.result().surrogate == "rank"
+    assert s_rank.result().surrogate_rows > 0
+    assert s_off.result().surrogate_rows == 0
+
+
+# ------------------------------------------------------------- study seam
+
+
+def test_study_plumbs_engine_surrogate_and_records_provenance(tmp_path):
+    study = Study.create(tmp_path / "s")
+    study.optimize(CELL_A, "tpe", SyntheticCellEvaluator("cellA"),
+                   budget=20, seed=1)
+    eng = study.engine.replace(surrogate="rank")
+    ev = SyntheticCellEvaluator("cellB")
+    out = study.optimize(CELL_B, "tpe", ev, budget=12, seed=4, engine=eng)
+    assert out.detail.surrogate == "rank"
+    assert out.detail.surrogate_rows > 0
+    assert out.evaluations == 12 + 1  # budget + defaults, nothing extra
+    rec = [r for r in study.sessions() if r["event"] == "start"][-1]
+    # sibling training set is provenance even though transfer stayed off
+    assert rec["args"]["surrogate"] == "rank"
+    assert rec["transfer"]["mode"] == "off"
+    assert [s["namespace"] for s in rec["transfer"]["siblings"]] == [CELL_A]
+    row = study.report()["sessions"][-1]
+    assert row["surrogate"] == "rank"
+    assert row["transfer"] == "off"
+
+
+def test_surrogate_session_replays_identically_over_complete_cache(tmp_path):
+    study = Study.create(tmp_path / "s")
+    study.optimize(CELL_A, "tpe", SyntheticCellEvaluator("cellA"),
+                   budget=20, seed=1)
+    eng = study.engine.replace(surrogate="rank")
+    first = study.optimize(CELL_B, "tpe", SyntheticCellEvaluator("cellB"),
+                           budget=12, seed=4, engine=eng)
+    ev2 = SyntheticCellEvaluator("cellB")
+    again = study.optimize(CELL_B, "tpe", ev2, budget=12, seed=4, engine=eng)
+    assert ev2.calls == 0
+    assert again.cache_stats["fresh"] == 0
+    assert again.best_time == first.best_time
+    assert again.best_config == first.best_config
+
+
+def test_unsupported_strategy_ignores_engine_surrogate(tmp_path):
+    # gsft has no supports_surrogate: engine surrogate="rank" must be a
+    # silent no-op (no bogus kwarg injected), not a crash
+    study = Study.create(tmp_path / "s")
+    eng = study.engine.replace(surrogate="rank")
+    out = study.optimize(CELL_A, "gsft", SyntheticCellEvaluator("cellA"),
+                         samples_per_param=2, engine=eng,
+                         active_params=["mesh_model_parallel"])
+    assert out.best_time <= out.default_time
+    rec = [r for r in study.sessions() if r["event"] == "start"][-1]
+    assert "surrogate" not in rec["args"]
+    assert "transfer" not in rec
